@@ -1,0 +1,36 @@
+"""Paper Fig. 4: barrier latency — point-to-point dissemination MPI_Barrier
+vs the shared-atomics reimplementation (vs OpenMP-native).
+
+Host wall times compare the two executable implementations; the alpha-model
+projects both to the production thread counts (the paper's observation:
+the pt2pt barrier pays lg(N) full message-queue round trips, the atomics
+barrier one fused reduction)."""
+
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import Row, run_mp_case
+
+ALPHA_MSG = 2.5e-7    # per-message envelope+enqueue+match (protocol model)
+ALPHA_ATOMIC = 6e-8   # one shared-atomic round
+
+
+def model_rows():
+    out = []
+    for n in (4, 16, 64, 256, 512):
+        lg = max(1, math.ceil(math.log2(n)))
+        t_msg = lg * ALPHA_MSG
+        t_atomic = lg * ALPHA_ATOMIC   # tree of atomics ~ lg rounds too
+        out.append((f"barrier_model_pt2pt_n{n}", t_msg * 1e6,
+                    f"rounds={lg}"))
+        out.append((f"barrier_model_atomic_n{n}", t_atomic * 1e6,
+                    f"rounds={lg}"))
+    return out
+
+
+def rows(fast: bool = False):
+    out = model_rows()
+    if not fast:
+        out += run_mp_case("barrier", ndev=8)
+    return out

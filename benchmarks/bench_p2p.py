@@ -1,0 +1,44 @@
+"""Paper Fig. 3: point-to-point latency / bandwidth — interthread
+(threadcomm) eager + 1-copy vs interprocess (MPI-everywhere) eager + rndv.
+
+Three layers of evidence:
+  1. the calibrated protocol model (core/protocol.py) — reproduces the
+     crossover structure of Fig. 3 (latency win for small eager messages,
+     ~2× bandwidth win for large 1-copy messages);
+  2. msgq Pallas kernel byte accounting (eager moves 2× the bytes);
+  3. host wall time of the ppermute sendrecv per protocol (subprocess).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, run_mp_case
+from repro.core import protocol
+from repro.kernels.msgq.ops import copy_accounting
+
+SIZES = [64, 256, 1024, 4096, 16384, 65536, 1 << 20, 1 << 22]
+
+
+def rows(fast: bool = False):
+    out = []
+    for nbytes in SIZES:
+        t_thread = protocol.interthread_latency(nbytes)
+        t_proc = protocol.interprocess_latency(nbytes)
+        proto = protocol.select_protocol(nbytes)
+        bw_t = nbytes / t_thread / 1e9
+        bw_p = nbytes / t_proc / 1e9
+        out.append((f"p2p_model_interthread_{nbytes}B", t_thread * 1e6,
+                    f"proto={proto};bw={bw_t:.2f}GB/s"))
+        out.append((f"p2p_model_interprocess_{nbytes}B", t_proc * 1e6,
+                    f"proto={protocol.select_protocol(nbytes, False)};"
+                    f"bw={bw_p:.2f}GB/s"))
+    # kernel byte accounting (the mechanism behind the bandwidth gap)
+    for nbytes in (4096, 1 << 20):
+        e = copy_accounting(nbytes, "eager")
+        o = copy_accounting(nbytes, "one_copy")
+        out.append((f"msgq_bytes_eager_{nbytes}B", 0.0,
+                    f"bytes_moved={e['bytes_moved']:.0f}"))
+        out.append((f"msgq_bytes_one_copy_{nbytes}B", 0.0,
+                    f"bytes_moved={o['bytes_moved']:.0f}"))
+    if not fast:
+        out += run_mp_case("p2p_wall", ndev=8)
+    return out

@@ -1,0 +1,34 @@
+"""Paper Fig. 5: array reduction — MPI_Reduce (binomial tree over the
+threadcomm) vs the OpenMP-reduction-clause analogue (fused native psum).
+
+The paper's result: with payload, the messaging abstraction matches or
+beats the language construct because the tree moves each element lg(N)
+times with full pipelining. We report host wall times for both executable
+schedules plus the alpha-beta model across sizes."""
+
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import Row, run_mp_case
+from repro.core.schedules import allreduce_cost
+
+
+def model_rows():
+    out = []
+    for nbytes in (64, 1024, 16384, 262144):
+        for n in (16, 256):
+            t_tree = allreduce_cost(n, nbytes, alpha=2.5e-7,
+                                    beta=1 / 12e9,
+                                    schedule="reduce_bcast") / 2
+            out.append((f"reduce_model_binomial_{nbytes}B_n{n}",
+                        t_tree * 1e6, f"lg={math.ceil(math.log2(n))}"))
+    return out
+
+
+def rows(fast: bool = False):
+    out = model_rows()
+    if not fast:
+        out += run_mp_case("reduce", ndev=8)
+        out += run_mp_case("allreduce_schedules", ndev=8)
+    return out

@@ -1,0 +1,35 @@
+"""Paper Fig. 6: PETSc MatMult (27-point stencil SpMV, 128³ cube) over the
+threadcomm vs MPI-everywhere.
+
+Host wall times over 1/2/4/8 unified ranks (correctness-checked against the
+single-device oracle inside the case). The derived column for the model
+rows reports the communication:compute byte ratio that makes the stencil
+scale (one halo plane vs nz_local planes per rank)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, run_mp_case
+
+
+def model_rows():
+    out = []
+    n = 128
+    for ranks in (1, 2, 4, 8, 16, 64, 256):
+        nz = n // ranks if n % ranks == 0 else None
+        if nz is None:
+            continue
+        halo_bytes = 2 * n * n * 4
+        compute_flops = 27 * 2 * nz * n * n
+        t_compute = compute_flops / 197e12
+        t_halo = halo_bytes / 50e9
+        out.append((f"spmv_model_ranks{ranks}_128cube",
+                    (t_compute + t_halo) * 1e6,
+                    f"halo/compute={t_halo / max(t_compute, 1e-12):.3f}"))
+    return out
+
+
+def rows(fast: bool = False):
+    out = model_rows()
+    if not fast:
+        out += run_mp_case("spmv", ndev=8, args=(64,))
+    return out

@@ -1,0 +1,138 @@
+"""Multi-device benchmark cases (run in a subprocess with N host devices).
+
+Each case prints ``ROW,<name>,<us_per_call>,<derived>`` lines. Wall times
+are CPU-host relative numbers (algorithmic comparison, not TPU latencies);
+the TPU-projected numbers come from the alpha-beta models in the parent
+bench modules.
+"""
+
+import os
+import sys
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from functools import partial
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import time_fn
+
+
+def _mesh(n):
+    return jax.make_mesh((n,), ("ranks",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def case_barrier():
+    """Fig. 4: barrier latency — dissemination-msg vs fused-atomic psum."""
+    from repro.core import collectives as coll
+    n = jax.device_count()
+    mesh = _mesh(n)
+    tok = jnp.arange(float(n))
+    for mode in ("msg", "atomic"):
+        fn = jax.jit(jax.shard_map(
+            lambda v: coll.barrier(v[0], "ranks", mode=mode)[None],
+            mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks")))
+        us = time_fn(fn, tok, iters=20)
+        print(f"ROW,barrier_{mode}_n{n},{us:.3f},host-wall")
+
+
+def case_reduce():
+    """Fig. 5: array reduce — binomial-tree schedule vs fused psum."""
+    from repro.core import collectives as coll
+    n = jax.device_count()
+    mesh = _mesh(n)
+    for nelem in (16, 256, 4096, 65536):
+        x = jnp.arange(float(n * nelem)).reshape(n, nelem)
+        for sched in ("binomial", "psum"):
+            if sched == "binomial":
+                f = lambda v: coll.reduce(v, "ranks", root=0,
+                                          schedule="binomial")
+            else:
+                f = lambda v: coll.reduce(v, "ranks", schedule="psum")
+            fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("ranks"),
+                                       out_specs=P("ranks")))
+            us = time_fn(fn, x, iters=10)
+            print(f"ROW,reduce_{sched}_{nelem * 4}B_n{n},{us:.3f},host-wall")
+
+
+def case_allreduce_schedules():
+    """Allreduce schedule comparison (ring / recursive-doubling / psum /
+    hierarchical over a 2x4 process-x-thread mesh)."""
+    from repro.core import collectives as coll
+    n = jax.device_count()
+    mesh = _mesh(n)
+    hmesh = jax.make_mesh((2, n // 2), ("proc", "thread"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    for nelem in (1024, 1 << 16):
+        x = jnp.arange(float(n * nelem)).reshape(n, nelem)
+        for sched in ("psum", "ring", "recursive_doubling"):
+            fn = jax.jit(jax.shard_map(
+                lambda v, s=sched: coll.allreduce(v, "ranks", schedule=s),
+                mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks")))
+            us = time_fn(fn, x, iters=10)
+            print(f"ROW,allreduce_{sched}_{nelem * 4}B_n{n},{us:.3f},host-wall")
+        xh = x.reshape(2, n // 2, nelem)
+        fnh = jax.jit(jax.shard_map(
+            lambda v: coll.hierarchical_allreduce(
+                v, process_axes=("proc",), thread_axes=("thread",)),
+            mesh=hmesh, in_specs=P(("proc", "thread")),
+            out_specs=P(("proc", "thread")), check_vma=False))
+        us = time_fn(fnh, x, iters=10)
+        print(f"ROW,allreduce_hierarchical_{nelem * 4}B_n{n},{us:.3f},host-wall")
+
+
+def case_spmv():
+    """Fig. 6: 27-point stencil MatMult scaling over threadcomm ranks."""
+    from repro.apps.spmv import make_distributed_matmult, stencil_matmult_ref
+    n_cube = int(sys.argv[2]) if len(sys.argv) > 2 else 64
+    ndev = jax.device_count()
+    x = jax.random.normal(jax.random.PRNGKey(0), (n_cube,) * 3)
+
+    ref_fn = jax.jit(stencil_matmult_ref)
+    us_ref = time_fn(ref_fn, x, iters=5)
+    print(f"ROW,spmv_matmult_ranks1_{n_cube}cube,{us_ref:.3f},host-wall")
+
+    for n_ranks in (2, 4, 8):
+        if n_ranks > ndev or n_cube % n_ranks:
+            continue
+        mesh = _mesh(n_ranks)
+        mm = make_distributed_matmult("ranks", n_ranks)
+        fn = jax.jit(jax.shard_map(mm, mesh=mesh, in_specs=P("ranks"),
+                                   out_specs=P("ranks")))
+        # correctness vs oracle, then timing
+        y = fn(x)
+        y_ref = ref_fn(x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+        us = time_fn(fn, x, iters=5)
+        print(f"ROW,spmv_matmult_ranks{n_ranks}_{n_cube}cube,{us:.3f},"
+              f"host-wall;verified")
+
+
+def case_p2p_wall():
+    """Fig. 3 (relative): ring sendrecv wall time, eager vs 1-copy padding."""
+    from repro.core import p2p
+    n = jax.device_count()
+    mesh = _mesh(n)
+    pairs = [(i, (i + 1) % n) for i in range(n)]
+    for nbytes in (256, 4096, 65536, 1 << 20):
+        nelem = max(1, nbytes // 4)
+        x = jnp.arange(float(n * nelem)).reshape(n, nelem)
+        for proto in ("eager", "one_copy"):
+            fn = jax.jit(jax.shard_map(
+                lambda v, p=proto: p2p.send_recv(v, "ranks", pairs,
+                                                 force_protocol=p)[0],
+                mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks")))
+            us = time_fn(fn, x, iters=10)
+            print(f"ROW,p2p_{proto}_{nbytes}B_n{n},{us:.3f},host-wall")
+
+
+CASES = {k[5:]: v for k, v in list(globals().items())
+         if k.startswith("case_")}
+
+if __name__ == "__main__":
+    CASES[sys.argv[1]]()

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus section comments). Pass
+``--fast`` to skip the multi-device subprocess measurements (models and
+artifact-derived rows only)."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip subprocess wall-time measurements")
+    ap.add_argument("--only", default=None,
+                    help="run a single bench module (p2p|barrier|reduce|"
+                         "spmv|collectives)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_barrier, bench_collectives, bench_p2p,
+                            bench_reduce, bench_spmv)
+    modules = {
+        "p2p": (bench_p2p, "paper Fig.3: p2p latency/bandwidth"),
+        "barrier": (bench_barrier, "paper Fig.4: barrier latency"),
+        "reduce": (bench_reduce, "paper Fig.5: reduce latency"),
+        "spmv": (bench_spmv, "paper Fig.6: PETSc MatMult (27pt stencil)"),
+        "collectives": (bench_collectives,
+                        "beyond-paper: hierarchical vs flat grad sync"),
+    }
+    if args.only:
+        modules = {args.only: modules[args.only]}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, (mod, desc) in modules.items():
+        print(f"# --- {key}: {desc} ---")
+        try:
+            for name, us, derived in mod.rows(fast=args.fast):
+                print(f"{name},{us:.3f},{derived}")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

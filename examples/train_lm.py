@@ -1,0 +1,105 @@
+"""End-to-end training driver: data pipeline → model → explicit-threadcomm
+or spmd trainer → checkpoints → resume.
+
+Presets:
+  demo (default): ~13M-param llama-style LM, a few hundred steps on CPU in
+                  minutes — loss visibly decreases on the structured
+                  synthetic stream.
+  100m:           ~124M params (the assignment's e2e scale; hours on this
+                  single-core CPU container, minutes on real hardware).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--preset demo]
+          [--steps 200] [--grad-sync threadcomm|flat|spmd] [--resume]
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.config import MeshConfig, ModelConfig, TrainConfig, ServeConfig
+from repro.data import SyntheticPipeline
+from repro.dist.sharding import batch_pspec
+from repro.models.registry import build_model
+from repro.train import checkpoint as ckpt
+from repro.train.trainer import init_train_state, make_train_step
+from repro.train.explicit import init_explicit_state
+
+PRESETS = {
+    "demo": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+                 head_dim=64, d_ff=1024, vocab_size=4096,
+                 batch=8, seq=128),
+    "100m": dict(num_layers=12, d_model=640, num_heads=10, num_kv_heads=5,
+                 head_dim=64, d_ff=2560, vocab_size=32000,
+                 batch=16, seq=512),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="demo", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--grad-sync", default="threadcomm",
+                    choices=["spmd", "threadcomm", "flat"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = ModelConfig(
+        name=f"llama-{args.preset}", family="dense", block="dense",
+        num_layers=p["num_layers"], d_model=p["d_model"],
+        num_heads=p["num_heads"], num_kv_heads=p["num_kv_heads"],
+        head_dim=p["head_dim"], d_ff=p["d_ff"], vocab_size=p["vocab_size"])
+    print(f"model: {cfg.name}  params={cfg.param_count() / 1e6:.1f}M")
+
+    mesh_cfg = MeshConfig(shape=(2, 2, 2),
+                          axis_names=("pod", "data", "model"),
+                          process_axes=("pod",))
+    mesh = jax.make_mesh(mesh_cfg.shape, mesh_cfg.axis_names,
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    tcfg = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                       learning_rate=3e-3, warmup_steps=20,
+                       total_steps=max(args.steps, 100), grad_sync=args.grad_sync,
+                       remat=False, loss_chunk=64, attn_chunk_threshold=256)
+    model = build_model(cfg, tcfg, ServeConfig(), tp=2)
+    pipe = SyntheticPipeline(cfg, batch=p["batch"], seq_len=p["seq"], seed=0)
+    b_shard = NamedSharding(mesh, batch_pspec(mesh_cfg))
+
+    if args.grad_sync == "spmd":
+        state = init_train_state(model, jax.random.PRNGKey(0))
+        step_fn = jax.jit(make_train_step(model, mesh_cfg, tcfg))
+    else:
+        state = init_explicit_state(model, jax.random.PRNGKey(0),
+                                    dp=mesh_cfg.dp)
+        step_fn = make_train_step(model, mesh_cfg, tcfg, mesh=mesh)
+
+    start = 0
+    if args.resume and ckpt.latest_step(args.ckpt_dir) is not None:
+        state, start, extra = ckpt.restore(args.ckpt_dir, state)
+        print(f"resumed from step {start}")
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = {k: jax.device_put(jnp.asarray(v), b_shard)
+                 for k, v in pipe.get_batch(i).items()}
+        state, metrics = step_fn(state, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"({(time.time() - t0):.1f}s)")
+        if (i + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, i + 1, state,
+                      extra=pipe.state_dict(i + 1), keep=2)
+    print("final loss:", float(metrics["loss"]))
+
+
+if __name__ == "__main__":
+    main()

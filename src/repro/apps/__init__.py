@@ -1,0 +1,2 @@
+from repro.apps.spmv import (stencil_matmult_ref, make_distributed_matmult,
+                             cg_solve_ref)  # noqa: F401

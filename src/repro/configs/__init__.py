@@ -1,0 +1,45 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each module exports ``CONFIG`` (the exact published config) and
+``SMOKE_CONFIG`` (a reduced same-family config for CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.config import ModelConfig
+
+_ARCH_MODULES = {
+    "hymba-1.5b": "hymba_1p5b",
+    "internvl2-76b": "internvl2_76b",
+    "dbrx-132b": "dbrx_132b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "gemma-2b": "gemma_2b",
+    "qwen3-14b": "qwen3_14b",
+    "qwen2.5-14b": "qwen2p5_14b",
+    "yi-9b": "yi_9b",
+    "whisper-tiny": "whisper_tiny",
+    "mamba2-370m": "mamba2_370m",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def _load(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _load(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _load(arch).SMOKE_CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_NAMES}

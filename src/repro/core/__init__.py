@@ -1,0 +1,12 @@
+"""The paper's primary contribution: MPIX Threadcomm adapted to JAX.
+
+- threadcomm.py:  unified N×M rank space + MPIX lifecycle semantics
+- schedules.py:   dissemination/binomial/ring/recursive-doubling schedules
+- collectives.py: executable shard_map collectives (explicit + fused + 2-level)
+- p2p.py:         rank-addressed messaging w/ eager|1-copy protocol selection
+- protocol.py:    the Fig.3 latency/bandwidth protocol model
+"""
+
+from repro.core.threadcomm import (ThreadComm, ThreadCommError, Group,
+                                   threadcomm_init)  # noqa: F401
+from repro.core import collectives, p2p, protocol, schedules  # noqa: F401

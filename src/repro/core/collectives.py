@@ -1,0 +1,209 @@
+"""Executable collectives over a unified rank space, built from
+``lax.ppermute`` + the schedules in :mod:`repro.core.schedules`.
+
+All functions are designed to be called INSIDE ``jax.shard_map`` (or
+``ThreadComm.run``). ``axes`` may be a single mesh-axis name or a tuple —
+a tuple spans the flattened (process-major) unified rank space, exactly the
+threadcomm construction.
+
+Two implementations exist for most ops:
+  * schedule-explicit (ppermute rounds) — the paper's point-to-point-based
+    stock algorithms (§4.2: "most collective algorithms consist of internal
+    point-to-point communications"),
+  * fused/native (psum & friends) — the paper's "shared-memory/atomics
+    reimplementation" analogue on TPU.
+The benchmarks compare them; the trainer uses the hierarchical composition.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import schedules as sch
+
+Axes = Union[str, Tuple[str, ...]]
+
+
+def axis_size(axes: Axes) -> int:
+    """Total size of (possibly tuple) mapped axes — static inside shard_map."""
+    return lax.psum(1, axes) if isinstance(axes, str) else lax.psum(1, axes)
+
+
+def unified_rank(axes: Axes):
+    """Flattened process-major rank index (traced int32)."""
+    if isinstance(axes, str):
+        return lax.axis_index(axes)
+    return lax.axis_index(axes)  # jax linearizes tuple axes row-major
+
+
+def _rounds_to_perms(rounds):
+    return [[(s, d) for (s, d) in rnd] for rnd in rounds]
+
+
+# ---------------------------------------------------------------------------
+# Barrier
+# ---------------------------------------------------------------------------
+
+def barrier(token, axes: Axes, mode: str = "msg"):
+    """Synchronization in dataflow terms: the returned token depends on every
+    rank's input token.
+
+    mode="msg":    dissemination algorithm, lg N ppermute rounds — the
+                   paper's point-to-point MPI_Barrier (Fig. 4 'MPI_Barrier
+                   (pt2pt)').
+    mode="atomic": one fused psum — the paper's shared-atomics
+                   reimplementation (Fig. 4 'MPI_Barrier (atomics)').
+    """
+    token = jnp.asarray(token, jnp.float32)
+    n = axis_size(axes)
+    if mode == "atomic":
+        return lax.pmax(token, axes)
+    for rnd in sch.dissemination_rounds(int(n)):
+        received = lax.ppermute(token, axes, rnd)
+        token = jnp.maximum(token, received)
+    return token
+
+
+# ---------------------------------------------------------------------------
+# Reduce / Bcast (binomial trees)
+# ---------------------------------------------------------------------------
+
+def reduce(x, axes: Axes, root: int = 0, schedule: str = "binomial"):
+    """Sum-reduce to ``root``. Non-root ranks return partial garbage (like
+    MPI_Reduce's undefined recv buffers). schedule='psum' is the fused
+    analogue (valid everywhere)."""
+    if schedule == "psum":
+        return lax.psum(x, axes)
+    n = int(axis_size(axes))
+    for rnd in sch.binomial_reduce_rounds(n, root):
+        received = lax.ppermute(x, axes, rnd)   # non-receivers get zeros
+        x = x + received
+    return x
+
+
+def bcast(x, axes: Axes, root: int = 0):
+    """Binomial broadcast from ``root`` over the unified rank space."""
+    n = int(axis_size(axes))
+    rank = unified_rank(axes)
+    for rnd in sch.binomial_bcast_rounds(n, root):
+        received = lax.ppermute(x, axes, rnd)
+        dsts = np.array([d for (_, d) in rnd]) if rnd else np.array([], int)
+        is_dst = jnp.any(rank == jnp.asarray(dsts)) if len(dsts) else False
+        x = jnp.where(is_dst, received, x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Allreduce
+# ---------------------------------------------------------------------------
+
+def allreduce(x, axes: Axes, schedule: str = "psum"):
+    if schedule == "psum":
+        return lax.psum(x, axes)
+    if schedule == "recursive_doubling":
+        n = int(axis_size(axes))
+        for rnd in sch.recursive_doubling_rounds(n):
+            x = x + lax.ppermute(x, axes, rnd)
+        return x
+    if schedule == "ring":
+        return _ring_allreduce(x, axes)
+    if schedule == "reduce_bcast":
+        n = int(axis_size(axes))
+        x = reduce(x, axes, root=0, schedule="binomial")
+        # mask non-root partials before broadcasting
+        x = jnp.where(unified_rank(axes) == 0, x, jnp.zeros_like(x))
+        return bcast(x, axes, root=0)
+    raise ValueError(f"unknown allreduce schedule {schedule!r}")
+
+
+def _ring_allreduce(x, axes: Axes):
+    """Bandwidth-optimal ring: reduce-scatter + allgather, 2(n-1) steps.
+    Explicit-schedule variant for tests/benchmarks (python-unrolled; use
+    'psum' or hierarchical for big meshes)."""
+    n = int(axis_size(axes))
+    rank = unified_rank(axes)
+    shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(n, -1)
+    ring = sch.ring_rounds(n)[0]
+
+    # reduce-scatter
+    for t in range(n - 1):
+        send_idx = (rank - t) % n
+        blk = jnp.take(chunks, send_idx, axis=0)
+        recv = lax.ppermute(blk, axes, ring)
+        recv_idx = (rank - t - 1) % n
+        chunks = chunks.at[recv_idx].add(recv)
+    # allgather
+    for t in range(n - 1):
+        send_idx = (rank - t + 1) % n
+        blk = jnp.take(chunks, send_idx, axis=0)
+        recv = lax.ppermute(blk, axes, ring)
+        recv_idx = (rank - t) % n
+        chunks = chunks.at[recv_idx].set(recv)
+
+    out = chunks.reshape(-1)
+    if pad:
+        out = out[:flat.size - pad] if pad else out
+    return out[:np.prod(shape, dtype=int)].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Allgather / ReduceScatter / AllToAll (native, tuple-axes capable)
+# ---------------------------------------------------------------------------
+
+def allgather(x, axes: Axes, tiled: bool = True):
+    return lax.all_gather(x, axes, tiled=tiled)
+
+
+def reduce_scatter(x, axes: Axes):
+    return lax.psum_scatter(x, axes, scatter_dimension=0, tiled=True)
+
+
+def alltoall(x, axes: Axes):
+    return lax.all_to_all(x, axes, split_axis=0, concat_axis=0, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical (threadcomm-aware) allreduce — the paper's technique
+# ---------------------------------------------------------------------------
+
+def hierarchical_allreduce(x, *, process_axes: Tuple[str, ...],
+                           thread_axes: Tuple[str, ...]):
+    """Two-level allreduce: reduce-scatter over the fast intra-process
+    domain, allreduce the 1/M shard over the slow inter-process domain,
+    allgather back. Inter-process traffic drops M× vs flat."""
+    if not thread_axes:
+        return lax.psum(x, process_axes)
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    m = int(axis_size(thread_axes))
+    pad = (-flat.size) % m
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    shard = lax.psum_scatter(flat, thread_axes, scatter_dimension=0,
+                             tiled=True)
+    if process_axes:
+        shard = lax.psum(shard, process_axes)
+    full = lax.all_gather(shard, thread_axes, tiled=True)
+    if pad:
+        full = full[:-pad]
+    return full.reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Point-to-point (ppermute-based sendrecv over unified ranks)
+# ---------------------------------------------------------------------------
+
+def sendrecv(x, axes: Axes, pairs: Sequence[Tuple[int, int]]):
+    """Explicit message round over unified ranks: each (src, dst) delivers
+    src's shard to dst; ranks not named as dst receive zeros."""
+    return lax.ppermute(x, axes, list(pairs))

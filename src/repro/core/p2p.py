@@ -1,0 +1,64 @@
+"""Point-to-point messaging over threadcomm ranks.
+
+JAX programs are statically scheduled SPMD, so p2p is rank-addressed
+``ppermute`` (no tag matching / unexpected-message queue — see DESIGN.md §7:
+the ordering hazard that makes MPI_THREAD_MULTIPLE slow does not exist under
+a static schedule; this IS the TPU-native realization of "the library knows
+the thread context").
+
+Protocol selection (eager vs 1-copy) follows the paper's thresholds; on the
+wire both lower to collective-permute, but the eager path pads tiny messages
+into fixed cells (aggregation-friendly, modeled in protocol.py) while the
+1-copy path moves the buffer directly. ``kernels/msgq`` implements the
+intra-device staging mechanics as a Pallas kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import protocol
+from repro.core.collectives import Axes
+
+
+def send_recv(x, axes: Axes, pairs: Sequence[Tuple[int, int]], *,
+              force_protocol: str = None):
+    """One message round over unified ranks. Returns (received, proto).
+
+    Small payloads (≤ cell) are padded to the cell size — the eager protocol's
+    fixed-cell enqueue; large payloads go through unpadded (1-copy).
+    """
+    nbytes = x.size * x.dtype.itemsize
+    proto = force_protocol or protocol.select_protocol(nbytes)
+    if proto in ("eager_fast", "eager"):
+        cell_elems = max(1, protocol.DEFAULT_CELL_SIZE // x.dtype.itemsize)
+        flat = x.reshape(-1)
+        pad = (-flat.size) % cell_elems if flat.size else cell_elems
+        padded = jnp.pad(flat, (0, pad)) if pad else flat
+        recv = lax.ppermute(padded, axes, list(pairs))
+        recv = recv[:flat.size].reshape(x.shape)
+    else:
+        recv = lax.ppermute(x, axes, list(pairs))
+    return recv, proto
+
+
+def shift(x, axes: Axes, n: int, offset: int = 1):
+    """Ring shift by ``offset`` over n unified ranks (halo-exchange helper)."""
+    perm = [(i, (i + offset) % n) for i in range(n)]
+    return lax.ppermute(x, axes, perm)
+
+
+def halo_exchange_1d(x, axes: Axes, n: int):
+    """Exchange boundary slabs with both ring neighbours (the SpMV / stencil
+    pattern of the PETSc case study §4.3). x: (local_n, ...) — returns
+    (from_left, from_right) slabs of x's boundary rows."""
+    left_edge = x[:1]
+    right_edge = x[-1:]
+    from_left = lax.ppermute(right_edge, axes,
+                             [(i, (i + 1) % n) for i in range(n)])
+    from_right = lax.ppermute(left_edge, axes,
+                              [(i, (i - 1) % n) for i in range(n)])
+    return from_left, from_right

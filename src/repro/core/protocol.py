@@ -1,0 +1,95 @@
+"""Message-protocol model: eager / rendezvous / 1-copy (paper §3.2, Fig. 3).
+
+The paper's interthread messaging picks a protocol by message size:
+
+  * eager  (≤ 4 KiB):   copy into a bounded shared cell, receiver copies out
+                        (2 copies) — plus a fast path that skips the request
+                        object for single-cell messages (lower latency).
+  * 1-copy (> 4 KiB):   receiver copies directly from the sender buffer
+                        (threads share the address space — no mapping cost).
+  * interprocess eager (≤ 16 KiB) / rendezvous (> 16 KiB): 2 copies through
+                        the shared-memory pool + header/ack handshake.
+
+On TPU the mechanism adapts (DESIGN.md §2): cells become VMEM staging
+buffers, 1-copy becomes a direct HBM→HBM DMA (see kernels/msgq). This module
+is the quantitative model — an alpha-beta fit that reproduces the crossover
+structure of Fig. 3 and drives protocol selection in p2p.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# thresholds from the paper's evaluation (§4.1)
+EAGER_THRESHOLD_INTERTHREAD = 4096      # bytes
+EAGER_THRESHOLD_INTERPROCESS = 16384    # bytes
+DEFAULT_CELL_SIZE = 4096                # shared-memory cell payload
+
+
+@dataclass(frozen=True)
+class HostModel:
+    """Per-message overheads (seconds) + copy bandwidth (bytes/sec), an
+    alpha-beta fit in the spirit of the Xeon 5317 numbers in Fig. 3."""
+    t_envelope: float = 8e-8      # assemble envelope + enqueue + match
+    t_request: float = 6e-8       # request-object alloc/dealloc (skippable)
+    t_handshake: float = 25e-8    # rndv/1-copy header + ack round trip
+    t_map: float = 0.0            # address mapping (0 between threads)
+    bw_copy: float = 12e9         # single-core memcpy bandwidth
+    cell: int = DEFAULT_CELL_SIZE
+
+
+@dataclass(frozen=True)
+class TPUModel:
+    """TPU analogue used by kernels/msgq accounting: VMEM-staged (2-copy)
+    vs direct HBM DMA (1-copy)."""
+    t_issue: float = 1e-6         # DMA descriptor issue
+    bw_hbm: float = 819e9         # HBM bandwidth (v5e)
+    vmem_cell: int = 64 * 1024    # VMEM staging cell
+
+
+def interthread_latency(nbytes: int, m: HostModel = HostModel()) -> float:
+    """Latency of one interthread message under the paper's protocol."""
+    if nbytes <= m.cell:
+        # eager fast path: request object skipped (paper's small-msg win)
+        return m.t_envelope + 2 * nbytes / m.bw_copy
+    if nbytes <= EAGER_THRESHOLD_INTERTHREAD:
+        return m.t_envelope + m.t_request + 2 * nbytes / m.bw_copy
+    # 1-copy: handshake + a single copy, no address-mapping cost
+    return (m.t_envelope + m.t_request + m.t_handshake + m.t_map
+            + nbytes / m.bw_copy)
+
+
+def interprocess_latency(nbytes: int, m: HostModel = HostModel()) -> float:
+    """MPI-everywhere shared-memory messaging (eager / rndv, always 2-copy)."""
+    if nbytes <= EAGER_THRESHOLD_INTERPROCESS:
+        ncells = -(-nbytes // m.cell)
+        return (m.t_envelope + m.t_request + 2 * nbytes / m.bw_copy
+                + (ncells - 1) * m.t_envelope * 0.25)
+    return (m.t_envelope + m.t_request + m.t_handshake
+            + 2 * nbytes / m.bw_copy)
+
+
+def select_protocol(nbytes: int, interthread: bool = True,
+                    cell: int = DEFAULT_CELL_SIZE) -> str:
+    if interthread:
+        if nbytes <= min(cell, EAGER_THRESHOLD_INTERTHREAD):
+            return "eager_fast"   # single cell: request object skipped
+        if nbytes <= EAGER_THRESHOLD_INTERTHREAD:
+            return "eager"        # multi-cell eager (cell < threshold configs)
+        return "one_copy"
+    return "eager" if nbytes <= EAGER_THRESHOLD_INTERPROCESS else "rndv"
+
+
+def bandwidth(nbytes: int, latency_s: float) -> float:
+    return nbytes / latency_s
+
+
+def tpu_staged_copy_time(nbytes: int, m: TPUModel = TPUModel()) -> float:
+    """2-copy through VMEM cells (eager analogue)."""
+    ncells = -(-nbytes // m.vmem_cell)
+    return ncells * m.t_issue + 2 * nbytes / m.bw_hbm
+
+
+def tpu_direct_copy_time(nbytes: int, m: TPUModel = TPUModel()) -> float:
+    """1-copy direct HBM DMA."""
+    return m.t_issue + nbytes / m.bw_hbm

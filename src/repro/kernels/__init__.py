@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical layers.
+
+msgq/            paper §3.2: cell-queue message copy (eager 2-copy through
+                 VMEM staging cells vs direct 1-copy HBM DMA)
+flash_attention/ blocked online-softmax attention (GQA, causal, window)
+ssd_scan/        Mamba2 SSD chunk scan with carried state
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper + dispatch), ref.py (pure-jnp oracle). Validated with
+interpret=True on CPU; compiled for TPU on real hardware.
+"""

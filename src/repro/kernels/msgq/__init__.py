@@ -1,0 +1,1 @@
+from repro.kernels.msgq.ops import msgq_copy, copy_accounting  # noqa: F401

@@ -1,0 +1,15 @@
+"""jit'd wrapper for the SSD scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = True):
+    """See ssd_scan_fwd. Oracle: ref.ssd_scan_ref (sequential recurrence)."""
+    return ssd_scan_fwd(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

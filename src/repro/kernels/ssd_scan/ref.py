@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the SSD scan kernel: the sequential recurrence
+(exact SSM semantics — the chunked algorithm must match it)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Sequential scan: state_{t} = state_{t-1} * exp(dt_t A) + dt_t x_t B_t;
+    y_t = C_t · state_t. Shapes as in ssd_scan_fwd."""
+    B, H, S, p = x.shape
+    n = Bm.shape[-1]
+
+    def per_bh(xb, dtb, a, Bb, Cb):
+        def step(state, inp):
+            xt, dtt, bt, ct = inp
+            state = state * jnp.exp(dtt * a) + dtt * xt[:, None] * bt[None, :]
+            return state, state @ ct
+        init = jnp.zeros((p, n), jnp.float32)
+        _, ys = jax.lax.scan(step, init, (xb.astype(jnp.float32),
+                                          dtb.astype(jnp.float32),
+                                          Bb.astype(jnp.float32),
+                                          Cb.astype(jnp.float32)))
+        return ys
+
+    f = jax.vmap(jax.vmap(per_bh, in_axes=(0, 0, 0, None, None)),
+                 in_axes=(0, 0, None, 0, 0))
+    return f(x, dt, A, Bm, Cm).astype(x.dtype)

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before any jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.config import MULTI_POD, SINGLE_POD, MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def production_mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    return MULTI_POD if multi_pod else SINGLE_POD
+
+
+def make_mesh_from_config(mesh_cfg: MeshConfig) -> jax.sharding.Mesh:
+    return jax.make_mesh(
+        mesh_cfg.shape, mesh_cfg.axis_names,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_cfg.axis_names))

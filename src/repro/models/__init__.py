@@ -1,0 +1,3 @@
+"""Model zoo: config-driven transformer / MoE / SSM / hybrid / enc-dec LMs."""
+
+from repro.models.registry import build_model  # noqa: F401

@@ -1,0 +1,313 @@
+"""Whisper-style encoder-decoder transformer.
+
+The audio (conv/mel) frontend is a STUB per the assignment: ``input_specs``
+provides precomputed frame embeddings (B, enc_seq, d_model). Encoder:
+bidirectional self-attention + sinusoidal positions. Decoder: causal
+self-attention (KV-cached) + cross-attention to the encoder output (cross
+K/V computed once at prefill) + learned positional embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import kv_store_heads
+
+MAX_DECODE_POS = 32_768  # decoder learned-position capacity (covers decode_32k)
+
+
+def _init_attn_block(cfg, key, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_norm(cfg, dtype),
+        "attn": L.init_attention(cfg, ks[0], dtype),
+        "ln2": L.init_norm(cfg, dtype),
+        "mlp": L.init_mlp(cfg, ks[1], dtype),
+    }
+
+
+def _init_dec_block(cfg, key, dtype):
+    ks = jax.random.split(key, 3)
+    p = _init_attn_block(cfg, ks[0], dtype)
+    p["ln_x"] = L.init_norm(cfg, dtype)
+    p["xattn"] = L.init_attention(cfg, ks[1], dtype)
+    return p
+
+
+def init_encdec_params(cfg: ModelConfig, key, dtype, max_pos: int = None):
+    max_pos = max_pos or MAX_DECODE_POS
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.num_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    params = {
+        "embed": L.embed_init(ks[2], (cfg.padded_vocab, cfg.d_model), dtype),
+        "dec_pos": L.embed_init(ks[3], (max_pos, cfg.d_model), dtype),
+        "enc_blocks": jax.vmap(lambda k: _init_attn_block(cfg, k, dtype))(
+            enc_keys),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(cfg, k, dtype))(
+            dec_keys),
+        "enc_norm": L.init_norm(cfg, dtype),
+        "final_norm": L.init_norm(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            ks[4], (cfg.d_model, cfg.padded_vocab), cfg.d_model, dtype)
+    return params
+
+
+def _self_attn(cfg, p, xn, positions, *, causal, knobs):
+    p = p["attn"]
+    q, k, v = L.project_qkv(p, xn, cfg, positions, use_rope=False)
+    kf, vf = L.repeat_kv(k, cfg.num_heads), L.repeat_kv(v, cfg.num_heads)
+    S = xn.shape[1]
+    if S > knobs["attn_chunk_threshold"]:
+        ctx = L.chunked_attention(q, kf, vf, q_pos=positions, k_pos=positions,
+                                  causal=causal, window=None,
+                                  chunk_q=knobs["attn_chunk"],
+                                  chunk_k=knobs["attn_chunk"])
+    else:
+        ctx = L.full_attention(q, kf, vf, q_pos=positions, k_pos=positions,
+                               causal=causal, window=None)
+    return L.attn_output(p, ctx, xn.dtype)
+
+
+def encode(cfg, params, frames, knobs):
+    """frames (B, T_enc, d) (stub embeddings) -> encoder hidden."""
+    compute_dtype = L.dtype_of(knobs["compute_dtype"])
+    x = frames.astype(compute_dtype)
+    x = x + L.sinusoidal_pos(x.shape[1], cfg.d_model).astype(compute_dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, p_l):
+        h = L.constrain(h, knobs.get("act_sharding"))
+        hn = L.apply_norm(h, p_l["ln1"], cfg)
+        h = h + _self_attn(cfg, p_l, hn, positions, causal=False, knobs=knobs)
+        h = h + L.mlp_apply(p_l["mlp"], L.apply_norm(h, p_l["ln2"], cfg), cfg)
+        return L.constrain(h, knobs.get("act_sharding")), None
+
+    if knobs["remat"]:
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["enc_blocks"])
+    return L.apply_norm(x, params["enc_norm"], cfg)
+
+
+def _cross_kv(cfg, p_x, enc_out):
+    """Encoder-side K/V for cross-attention (no rope, no cache growth)."""
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p_x["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p_x["wv"].astype(enc_out.dtype))
+    if cfg.qkv_bias:
+        k = k + p_x["bk"].astype(enc_out.dtype)
+        v = v + p_x["bv"].astype(enc_out.dtype)
+    return k, v
+
+
+def _cross_attn(cfg, p_x, xn, ck, cv):
+    q = jnp.einsum("bsd,dhk->bshk", xn, p_x["wq"].astype(xn.dtype))
+    if cfg.qkv_bias:
+        q = q + p_x["bq"].astype(xn.dtype)
+    kf, vf = L.repeat_kv(ck, cfg.num_heads), L.repeat_kv(cv, cfg.num_heads)
+    Sq, Tk = xn.shape[1], ck.shape[1]
+    ctx = L.full_attention(q, kf, vf, q_pos=jnp.arange(Sq),
+                           k_pos=jnp.arange(Tk), causal=False, window=None)
+    return L.attn_output(p_x, ctx, xn.dtype)
+
+
+def decode_full(cfg, params, tokens, enc_out, knobs, pos_offset: int = 0):
+    """Teacher-forced decoder pass. Returns final hidden (B,S,d)."""
+    compute_dtype = L.dtype_of(knobs["compute_dtype"])
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    S = tokens.shape[1]
+    positions = jnp.arange(pos_offset, pos_offset + S)
+    x = x + lax.dynamic_slice_in_dim(params["dec_pos"], pos_offset, S, axis=0
+                                     ).astype(compute_dtype)
+
+    def body(h, p_l):
+        h = L.constrain(h, knobs.get("act_sharding"))
+        hn = L.apply_norm(h, p_l["ln1"], cfg)
+        h = h + _self_attn(cfg, p_l, hn, positions, causal=True, knobs=knobs)
+        ck, cv = _cross_kv(cfg, p_l["xattn"], enc_out)
+        h = h + _cross_attn(cfg, p_l["xattn"],
+                            L.apply_norm(h, p_l["ln_x"], cfg), ck, cv)
+        h = h + L.mlp_apply(p_l["mlp"], L.apply_norm(h, p_l["ln2"], cfg), cfg)
+        return L.constrain(h, knobs.get("act_sharding")), None
+
+    if knobs["remat"]:
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["dec_blocks"])
+    return L.apply_norm(x, params["final_norm"], cfg)
+
+
+def make_train_loss(cfg: ModelConfig, knobs):
+    def train_loss(params, batch):
+        enc_out = encode(cfg, params, batch["frames"], knobs)
+        hidden = decode_full(cfg, params, batch["tokens"], enc_out, knobs)
+        labels = batch["labels"]
+        valid = labels >= 0
+        w_out = (params["embed"].T if cfg.tie_embeddings
+                 else params["lm_head"])
+        loss_sum, n_valid = L.chunked_cross_entropy(
+            hidden, w_out.astype(hidden.dtype), jnp.maximum(labels, 0),
+            valid=valid, vocab_size=cfg.vocab_size, chunk=knobs["loss_chunk"])
+        loss = loss_sum / jnp.maximum(n_valid, 1.0)
+        return loss, {"loss": loss}
+
+    return train_loss
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, cache_len: int, tp: int,
+                      compute_dtype):
+    Lc = cfg.num_layers
+    gs = kv_store_heads(cfg, tp)
+    return {
+        "k": jnp.zeros((Lc, batch, cache_len, gs, cfg.head_dim), compute_dtype),
+        "v": jnp.zeros((Lc, batch, cache_len, gs, cfg.head_dim), compute_dtype),
+        "pos": jnp.full((Lc, cache_len), -1, jnp.int32),
+        "cross_k": jnp.zeros((Lc, batch, cfg.encoder_seq,
+                              cfg.num_kv_heads, cfg.head_dim), compute_dtype),
+        "cross_v": jnp.zeros((Lc, batch, cfg.encoder_seq,
+                              cfg.num_kv_heads, cfg.head_dim), compute_dtype),
+    }
+
+
+def make_prefill(cfg: ModelConfig, knobs, tp: int):
+    compute_dtype = L.dtype_of(knobs["compute_dtype"])
+
+    def prefill(params, batch, cache_len: int):
+        """Encode frames + prime the decoder with the prompt tokens."""
+        enc_out = encode(cfg, params, batch["frames"], knobs)
+        B = enc_out.shape[0]
+        cache = init_encdec_cache(cfg, B, cache_len, tp, compute_dtype)
+
+        # per-layer cross K/V via a scan over stacked decoder params
+        def body(_, p_l):
+            ck, cv = _cross_kv(cfg, p_l["xattn"], enc_out)
+            return (), (ck, cv)
+        _, (cks, cvs) = lax.scan(body, (), params["dec_blocks"])
+        cache["cross_k"] = cks.astype(compute_dtype)
+        cache["cross_v"] = cvs.astype(compute_dtype)
+
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        gs = kv_store_heads(cfg, tp)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+        positions = jnp.arange(S)
+        x = x + params["dec_pos"][:S].astype(compute_dtype)
+
+        def dbody(h, p_l):
+            hn = L.apply_norm(h, p_l["ln1"], cfg)
+            q, k, v = L.project_qkv(p_l["attn"], hn, cfg, positions,
+                                    use_rope=False)
+            kf, vf = L.repeat_kv(k, cfg.num_heads), L.repeat_kv(v, cfg.num_heads)
+            if S > knobs["attn_chunk_threshold"]:
+                ctx = L.chunked_attention(
+                    q, kf, vf, q_pos=positions, k_pos=positions, causal=True,
+                    window=None, chunk_q=knobs["attn_chunk"],
+                    chunk_k=knobs["attn_chunk"])
+            else:
+                ctx = L.full_attention(q, kf, vf, q_pos=positions,
+                                       k_pos=positions, causal=True,
+                                       window=None)
+            h = h + L.attn_output(p_l["attn"], ctx, hn.dtype)
+            ck, cv = _cross_kv(cfg, p_l["xattn"], enc_out)
+            h = h + _cross_attn(cfg, p_l["xattn"],
+                                L.apply_norm(h, p_l["ln_x"], cfg), ck, cv)
+            h = h + L.mlp_apply(p_l["mlp"], L.apply_norm(h, p_l["ln2"], cfg),
+                                cfg)
+            return h, (L.repeat_kv(k, gs), L.repeat_kv(v, gs))
+
+        if knobs["remat"]:
+            dbody = jax.checkpoint(dbody)
+        x, (ks_, vs_) = lax.scan(dbody, x, params["dec_blocks"])
+        x = L.apply_norm(x, params["final_norm"], cfg)
+        cache["k"] = lax.dynamic_update_slice_in_dim(
+            cache["k"], ks_.astype(compute_dtype), 0, axis=2)
+        cache["v"] = lax.dynamic_update_slice_in_dim(
+            cache["v"], vs_.astype(compute_dtype), 0, axis=2)
+        pos_row = jnp.where(jnp.arange(cache_len) < S, jnp.arange(cache_len),
+                            -1)
+        cache["pos"] = jnp.broadcast_to(pos_row, (cfg.num_layers, cache_len))
+        w_out = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = (x[:, -1, :] @ w_out.astype(compute_dtype)
+                  ).astype(jnp.float32)
+        vocab_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        return jnp.where(vocab_ok, logits, L.NEG_INF), cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, knobs, tp: int):
+    compute_dtype = L.dtype_of(knobs["compute_dtype"])
+
+    def decode_step(params, cache, token, pos):
+        """Self-attn cache rides in the scan carry (in-place update, aliases
+        with donation); the immutable cross K/V streams through xs."""
+        B = token.shape[0]
+        x = jnp.take(params["embed"], token, axis=0).astype(compute_dtype)
+        x = x + lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0
+                                         ).astype(compute_dtype)
+        mutable = {k: cache[k] for k in ("k", "v", "pos")}
+
+        def layer_slice(tree, idx):
+            return jax.tree_util.tree_map(
+                lambda c: lax.dynamic_index_in_dim(c, idx, 0, keepdims=False),
+                tree)
+
+        def layer_put(tree, new, idx):
+            return jax.tree_util.tree_map(
+                lambda c, n: lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), idx, 0), tree, new)
+
+        def body(carry, xs):
+            h, mut = carry
+            p_l, cross_k, cross_v, idx = xs
+            cache_l = layer_slice(mut, idx)
+            cache_l["cross_k"] = cross_k
+            cache_l["cross_v"] = cross_v
+            hn = L.apply_norm(h, p_l["ln1"], cfg)
+            positions = jnp.full((1,), pos)
+            q, k, v = L.project_qkv(p_l["attn"], hn, cfg, positions,
+                                    use_rope=False)
+            gs = cache_l["k"].shape[2]
+            kc, vc = L.repeat_kv(k, gs), L.repeat_kv(v, gs)
+            W = cache_l["k"].shape[1]
+            slot = pos % W
+            nk = lax.dynamic_update_slice_in_dim(cache_l["k"], kc, slot, axis=1)
+            nv = lax.dynamic_update_slice_in_dim(cache_l["v"], vc, slot, axis=1)
+            npos = lax.dynamic_update_slice_in_dim(
+                cache_l["pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0)
+            kf, vf = L.repeat_kv(nk, cfg.num_heads), L.repeat_kv(nv, cfg.num_heads)
+            okay = (npos >= 0) & (npos <= pos)
+            sc = jnp.einsum("bqhk,bthk->bhqt", q, kf).astype(jnp.float32)
+            sc = sc / (cfg.head_dim ** 0.5)
+            sc = sc + jnp.where(okay, 0.0, L.NEG_INF)[None, None, None, :]
+            prob = jax.nn.softmax(sc, axis=-1).astype(hn.dtype)
+            ctx = jnp.einsum("bhqt,bthk->bqhk", prob, vf)
+            h = h + L.attn_output(p_l["attn"], ctx, hn.dtype)
+            h = h + _cross_attn(cfg, p_l["xattn"],
+                                L.apply_norm(h, p_l["ln_x"], cfg),
+                                cache_l["cross_k"], cache_l["cross_v"])
+            h = h + L.mlp_apply(p_l["mlp"], L.apply_norm(h, p_l["ln2"], cfg),
+                                cfg)
+            mut = layer_put(mut, {"k": nk, "v": nv, "pos": npos}, idx)
+            return (h, mut), None
+
+        (x, mutable), _ = lax.scan(
+            body, (x, mutable),
+            (params["dec_blocks"], cache["cross_k"], cache["cross_v"],
+             jnp.arange(cfg.num_layers)))
+        new_cache = {**mutable, "cross_k": cache["cross_k"],
+                     "cross_v": cache["cross_v"]}
+        x = L.apply_norm(x, params["final_norm"], cfg)
+        w_out = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = (x[:, 0, :] @ w_out.astype(compute_dtype)
+                  ).astype(jnp.float32)
+        vocab_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        return jnp.where(vocab_ok, logits, L.NEG_INF), new_cache
+
+    return decode_step

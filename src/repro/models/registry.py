@@ -1,0 +1,149 @@
+"""Model registry: build a uniform ``Model`` bundle from a ModelConfig.
+
+The bundle carries jit-able pure functions closed over the config plus the
+execution knobs (dtypes, chunk sizes, remat). ``input_specs`` produces
+``jax.ShapeDtypeStruct`` stand-ins for every model input of a workload cell —
+the dry-run lowers against these without allocating anything.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig, TrainConfig, ServeConfig
+from repro.models import encdec, transformer
+from repro.models.layers import dtype_of
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    train_loss: Callable[[Any, Dict[str, jax.Array]], Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Any]
+    knobs: Dict[str, Any]
+    tp: int
+
+
+def _knobs(train: TrainConfig, serve: ServeConfig,
+           act_sharding=None, attn_sharding=None) -> Dict[str, Any]:
+    return {
+        "compute_dtype": train.compute_dtype,
+        "param_dtype": train.param_dtype,
+        "loss_chunk": train.loss_chunk,
+        "attn_chunk_threshold": train.attn_chunk_threshold,
+        "attn_chunk": train.attn_chunk,
+        "attn_chunk_kv": getattr(train, "attn_chunk_kv", 0),
+        "remat": train.remat,
+        "ring_buffer": serve.ring_buffer,
+        "act_sharding": act_sharding,
+        "attn_sharding": attn_sharding,
+    }
+
+
+def build_model(cfg: ModelConfig, train: TrainConfig = None,
+                serve: ServeConfig = None, tp: int = 1,
+                act_sharding=None, attn_sharding=None) -> Model:
+    train = train or TrainConfig()
+    serve = serve or ServeConfig()
+    knobs = _knobs(train, serve, act_sharding, attn_sharding)
+    pdt = dtype_of(train.param_dtype)
+
+    if cfg.is_encoder_decoder:
+        init = lambda key: encdec.init_encdec_params(cfg, key, pdt)
+        return Model(
+            cfg=cfg,
+            init=init,
+            train_loss=encdec.make_train_loss(cfg, knobs),
+            prefill=encdec.make_prefill(cfg, knobs, tp),
+            decode_step=encdec.make_decode_step(cfg, knobs, tp),
+            init_cache=lambda batch, cache_len, dtype=None: (
+                encdec.init_encdec_cache(cfg, batch, cache_len, tp,
+                                         dtype or dtype_of(knobs["compute_dtype"]))),
+            knobs=knobs, tp=tp)
+
+    init = lambda key: transformer.init_lm_params(cfg, key, pdt)
+    return Model(
+        cfg=cfg,
+        init=init,
+        train_loss=transformer.make_train_loss(cfg, knobs),
+        prefill=transformer.make_prefill(cfg, knobs, tp),
+        decode_step=transformer.make_decode_step(cfg, knobs, tp),
+        init_cache=lambda batch, cache_len, dtype=None: (
+            transformer.init_cache(cfg, batch, cache_len, tp,
+                                   dtype or dtype_of(knobs["compute_dtype"]))),
+        knobs=knobs, tp=tp)
+
+
+# ---------------------------------------------------------------------------
+# Workload inputs
+# ---------------------------------------------------------------------------
+
+def cache_len_for(cfg: ModelConfig, shape: ShapeConfig, serve: ServeConfig):
+    """KV-cache capacity for a decode cell. Ring-buffer mode bounds it at the
+    sliding window (sub-quadratic serving for hymba long_500k)."""
+    if serve.ring_buffer and cfg.swa_window > 0:
+        return min(shape.seq_len, cfg.swa_window)
+    return shape.seq_len
+
+
+def batch_spec(cfg: ModelConfig, shape: ShapeConfig,
+               compute_dtype: str = "bfloat16") -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the *data* inputs of a train/prefill
+    step (decode caches are built separately via init_cache + eval_shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    cdt = dtype_of(compute_dtype)
+    i32 = jnp.int32
+    if cfg.is_encoder_decoder:
+        return {
+            "frames": jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model),
+                                           cdt),
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    if cfg.frontend == "patch_stub":
+        F = cfg.num_frontend_tokens
+        s_text = S - F
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, s_text), i32),
+            "labels": jax.ShapeDtypeStruct((B, s_text), i32),
+            "patch_embeds": jax.ShapeDtypeStruct((B, F, cfg.d_model), cdt),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        "labels": jax.ShapeDtypeStruct((B, S), i32),
+    }
+
+
+def make_synthetic_batch(cfg: ModelConfig, shape_or_batch, seq_len=None,
+                         seed: int = 0, compute_dtype: str = "bfloat16"):
+    """Concrete random batch matching batch_spec (for smoke tests/examples)."""
+    if isinstance(shape_or_batch, ShapeConfig):
+        B, S = shape_or_batch.global_batch, shape_or_batch.seq_len
+    else:
+        B, S = shape_or_batch, seq_len
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    cdt = dtype_of(compute_dtype)
+    if cfg.is_encoder_decoder:
+        return {
+            "frames": jax.random.normal(k1, (B, cfg.encoder_seq, cfg.d_model),
+                                        cdt),
+            "tokens": jax.random.randint(k2, (B, S), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k3, (B, S), 0, cfg.vocab_size),
+        }
+    if cfg.frontend == "patch_stub":
+        F = cfg.num_frontend_tokens
+        return {
+            "tokens": jax.random.randint(k2, (B, S - F), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k3, (B, S - F), 0, cfg.vocab_size),
+            "patch_embeds": jax.random.normal(k1, (B, F, cfg.d_model), cdt),
+        }
+    return {
+        "tokens": jax.random.randint(k2, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k3, (B, S), 0, cfg.vocab_size),
+    }

@@ -1,0 +1,445 @@
+"""Decoder-only transformer LM: dense / MoE / SSM / hybrid blocks.
+
+One stacked-parameter block structure per model so layers run under
+``lax.scan`` (small HLO, fast compile at 80 layers). Heterogeneity across
+layers (hymba global-vs-sliding-window attention) is carried as a stacked
+per-layer flag consumed inside the scanned body.
+
+Three entry points per model:
+  * ``train_loss(params, batch)``    — full causal forward + chunked CE
+  * ``prefill(params, batch)``       — forward + build KV/SSM cache
+  * ``decode_step(params, cache, token, pos)`` — one-token serve step
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import (BLOCK_DENSE, BLOCK_HYBRID, BLOCK_MOE, BLOCK_SSM,
+                          ModelConfig)
+from repro.models import layers as L
+from repro.models import mamba, moe
+
+
+# ---------------------------------------------------------------------------
+# KV-cache head layout
+# ---------------------------------------------------------------------------
+
+def kv_store_heads(cfg: ModelConfig, tp: int) -> int:
+    """Number of kv heads to *store* in the cache: the smallest replication
+    of the true kv heads that the model mesh axis divides (Megatron-style
+    kv-head replication for TP > kv_heads). Falls back to no replication
+    (cache replicated across TP) when head counts are coprime to tp."""
+    if cfg.num_kv_heads == 0:
+        return 0
+    reps = cfg.num_heads // cfg.num_kv_heads
+    for r in range(1, reps + 1):
+        if reps % r == 0 and (cfg.num_kv_heads * r) % tp == 0 \
+                and cfg.num_heads % (cfg.num_kv_heads * r) == 0:
+            return cfg.num_kv_heads * r
+    return cfg.num_kv_heads
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_block(cfg: ModelConfig, key, dtype):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"ln1": L.init_norm(cfg, dtype)}
+    if cfg.uses_attention:
+        p["attn"] = L.init_attention(cfg, ks[0], dtype)
+    if cfg.block == BLOCK_HYBRID:
+        p["ssm"] = mamba.init_ssm(cfg, ks[1], dtype)
+        # per-branch output norms before averaging (hymba)
+        p["attn_out_norm"] = jnp.ones((cfg.d_model,), dtype)
+        p["ssm_out_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.block == BLOCK_SSM:
+        p["ssm"] = mamba.init_ssm(cfg, ks[1], dtype)
+    if cfg.block in (BLOCK_DENSE, BLOCK_HYBRID):
+        p["ln2"] = L.init_norm(cfg, dtype)
+        p["mlp"] = L.init_mlp(cfg, ks[2], dtype)
+    if cfg.block == BLOCK_MOE:
+        p["ln2"] = L.init_norm(cfg, dtype)
+        p["moe"] = moe.init_moe(cfg, ks[2], dtype)
+    return p
+
+
+def init_lm_params(cfg: ModelConfig, key, dtype):
+    ks = jax.random.split(key, 3)
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(ks[0], (cfg.padded_vocab, cfg.d_model), dtype),
+        "final_norm": L.init_norm(cfg, dtype),
+    }
+    layer_keys = jax.random.split(ks[1], cfg.num_layers)
+    params["blocks"] = jax.vmap(
+        lambda k: init_block(cfg, k, dtype))(layer_keys)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            ks[2], (cfg.d_model, cfg.padded_vocab), cfg.d_model, dtype)
+    return params
+
+
+def layer_flags(cfg: ModelConfig):
+    """Stacked per-layer metadata: is_global (full attention) flag."""
+    flags = jnp.zeros((cfg.num_layers,), bool)
+    for i in cfg.global_layers:
+        flags = flags.at[i].set(True)
+    return flags
+
+
+# ---------------------------------------------------------------------------
+# Block forward (full sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_branch(cfg, p, xn, positions, is_global, knobs,
+                 collect_cache: bool, cache_heads: int):
+    """Self-attention on normed input. Returns (out, cache_or_None)."""
+    p = p["attn"]
+    S = xn.shape[1]
+    q, k, v = L.project_qkv(p, xn, cfg, positions)
+    # dynamic per-layer window: 0 disables the window clause in the mask
+    if cfg.swa_window > 0:
+        window = jnp.where(is_global, 0, cfg.swa_window)
+    else:
+        window = None
+    kf = L.repeat_kv(k, cfg.num_heads)
+    vf = L.repeat_kv(v, cfg.num_heads)
+    # pin head-sharded attention when heads divide the model axis —
+    # otherwise XLA may pick context-parallel attention whose bwd carries
+    # save with UNSHARDED heads (2.15GB/layer on internvl; §Perf)
+    attn_sh = knobs.get("attn_sharding")
+    if attn_sh is not None:
+        q = L.constrain(q, attn_sh)
+        kf = L.constrain(kf, attn_sh)
+        vf = L.constrain(vf, attn_sh)
+    if S > knobs["attn_chunk_threshold"]:
+        ctx = L.chunked_attention(
+            q, kf, vf, q_pos=positions, k_pos=positions, causal=True,
+            window=window, softcap=cfg.logit_softcap,
+            chunk_q=knobs["attn_chunk"],
+            chunk_k=knobs.get("attn_chunk_kv") or knobs["attn_chunk"])
+    else:
+        ctx = L.full_attention(q, kf, vf, q_pos=positions, k_pos=positions,
+                               causal=True, window=window,
+                               softcap=cfg.logit_softcap)
+    out = L.attn_output(p, ctx, xn.dtype)
+    cache = None
+    if collect_cache:
+        kc = L.repeat_kv(k, cache_heads)
+        vc = L.repeat_kv(v, cache_heads)
+        cache = {"k": kc, "v": vc}
+    return out, cache
+
+
+def block_forward(cfg, p, x, positions, is_global, knobs, *,
+                  collect_cache=False, cache_heads=0, collect_state=False):
+    """One block, full-sequence. Returns (x, aux, cache)."""
+    aux: Dict[str, Any] = {}
+    cache: Dict[str, Any] = {}
+    xn = L.apply_norm(x, p["ln1"], cfg)
+
+    if cfg.block == BLOCK_SSM:
+        if collect_state:
+            out, st = mamba.ssm_apply(p["ssm"], xn, cfg, return_state=True)
+            cache.update(st)
+        else:
+            out = mamba.ssm_apply(p["ssm"], xn, cfg)
+        x = x + out
+    elif cfg.block == BLOCK_HYBRID:
+        a_out, a_cache = _attn_branch(cfg, p, xn, positions, is_global, knobs,
+                                      collect_cache, cache_heads)
+        if collect_state:
+            s_out, st = mamba.ssm_apply(p["ssm"], xn, cfg, return_state=True)
+            cache.update(st)
+        else:
+            s_out = mamba.ssm_apply(p["ssm"], xn, cfg)
+        a_out = L.rmsnorm(a_out, p["attn_out_norm"], eps=cfg.norm_eps)
+        s_out = L.rmsnorm(s_out, p["ssm_out_norm"], eps=cfg.norm_eps)
+        x = x + 0.5 * (a_out + s_out)
+        if a_cache:
+            cache.update(a_cache)
+    else:  # dense / moe attention sublayer
+        a_out, a_cache = _attn_branch(cfg, p, xn, positions, is_global, knobs,
+                                      collect_cache, cache_heads)
+        x = x + a_out
+        if a_cache:
+            cache.update(a_cache)
+
+    if cfg.block in (BLOCK_DENSE, BLOCK_HYBRID):
+        x = x + L.mlp_apply(p["mlp"], L.apply_norm(x, p["ln2"], cfg), cfg)
+    elif cfg.block == BLOCK_MOE:
+        m_out, m_aux = moe.moe_apply(p["moe"], L.apply_norm(x, p["ln2"], cfg),
+                                     cfg)
+        x = x + m_out
+        aux.update(m_aux)
+    return x, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# Backbone
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg, params, tokens, compute_dtype):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+    return x
+
+
+def backbone(cfg, params, x, positions, knobs, *, collect_cache=False,
+             cache_heads=0, collect_state=False, remat=True):
+    """Scan blocks over stacked params. x (B,S,d) -> (hidden, aux, caches)."""
+    flags = layer_flags(cfg)
+
+    def body(h, xs):
+        p_l, flag = xs
+        h = L.constrain(h, knobs.get("act_sharding"))
+        h, aux, cache = block_forward(
+            cfg, p_l, h, positions, flag, knobs,
+            collect_cache=collect_cache, cache_heads=cache_heads,
+            collect_state=collect_state)
+        h = L.constrain(h, knobs.get("act_sharding"))
+        return h, (aux, cache)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, (auxs, caches) = lax.scan(body, x, (params["blocks"], flags))
+    aux = {k: jnp.mean(v) for k, v in auxs.items()}
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    return x, aux, caches
+
+
+def lm_head_weight(cfg, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Public entry points (decoder-only; enc-dec lives in encdec.py)
+# ---------------------------------------------------------------------------
+
+def make_train_loss(cfg: ModelConfig, knobs):
+    compute_dtype = L.dtype_of(knobs["compute_dtype"])
+
+    def train_loss(params, batch):
+        tokens = batch["tokens"]
+        x = embed_tokens(cfg, params, tokens, compute_dtype)
+        positions = jnp.arange(x.shape[1])
+        if cfg.frontend == "patch_stub":
+            # prepend precomputed patch embeddings (frontend stub)
+            pe = batch["patch_embeds"].astype(compute_dtype)
+            x = jnp.concatenate([pe, x], axis=1)
+            positions = jnp.arange(x.shape[1])
+        hidden, aux, _ = backbone(cfg, params, x, positions, knobs,
+                                  remat=knobs["remat"])
+        labels = batch["labels"]
+        if cfg.frontend == "patch_stub":
+            # keep the full (nicely sharded) sequence; mask the patch
+            # positions in the loss instead of slicing hidden — slicing
+            # makes the text length ragged vs the SP shards / CE chunks and
+            # XLA replicates the whole stream (+12GB on internvl, §Perf)
+            F = batch["patch_embeds"].shape[1]
+            pad = jnp.full((labels.shape[0], F), -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        valid = labels >= 0
+        loss_sum, n_valid = L.chunked_cross_entropy(
+            hidden, lm_head_weight(cfg, params).astype(compute_dtype),
+            jnp.maximum(labels, 0), valid=valid, vocab_size=cfg.vocab_size,
+            chunk=knobs["loss_chunk"])
+        loss = loss_sum / jnp.maximum(n_valid, 1.0)
+        if "moe_lb_loss" in aux:
+            loss = loss + 0.01 * aux["moe_lb_loss"] + 1e-3 * aux["moe_z_loss"]
+        metrics = {"loss": loss, **aux}
+        return loss, metrics
+
+    return train_loss
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, tp: int,
+               compute_dtype):
+    """Stacked (L, ...) cache pytree. ``cache_len`` already reflects
+    ring-buffer windowing when enabled."""
+    Lc = cfg.num_layers
+    c: Dict[str, Any] = {}
+    if cfg.uses_attention:
+        gs = kv_store_heads(cfg, tp)
+        c["k"] = jnp.zeros((Lc, batch, cache_len, gs, cfg.head_dim),
+                           compute_dtype)
+        c["v"] = jnp.zeros((Lc, batch, cache_len, gs, cfg.head_dim),
+                           compute_dtype)
+        c["pos"] = jnp.full((Lc, cache_len), -1, jnp.int32)
+    if cfg.block in (BLOCK_SSM, BLOCK_HYBRID):
+        di, n = cfg.ssm_d_inner, cfg.ssm_state
+        c["conv"] = jnp.zeros((Lc, batch, cfg.ssm_conv - 1, di + 2 * n),
+                              compute_dtype)
+        c["ssm"] = jnp.zeros((Lc, batch, cfg.ssm_heads, cfg.ssm_head_dim, n),
+                             jnp.float32)
+    return c
+
+
+def make_prefill(cfg: ModelConfig, knobs, tp: int):
+    compute_dtype = L.dtype_of(knobs["compute_dtype"])
+    cache_heads = kv_store_heads(cfg, tp)
+
+    def prefill(params, batch, cache_len: int):
+        """Run the prompt, return (last-position logits, cache)."""
+        tokens = batch["tokens"]
+        x = embed_tokens(cfg, params, tokens, compute_dtype)
+        positions = jnp.arange(x.shape[1])
+        if cfg.frontend == "patch_stub":
+            pe = batch["patch_embeds"].astype(compute_dtype)
+            x = jnp.concatenate([pe, x], axis=1)
+            positions = jnp.arange(x.shape[1])
+        S = x.shape[1]
+        hidden, _, caches = backbone(
+            cfg, params, x, positions, knobs, collect_cache=True,
+            cache_heads=cache_heads, collect_state=True,
+            remat=knobs["remat"])
+        # place collected kv into fixed-capacity cache buffers
+        B = x.shape[0]
+        cache = init_cache(cfg, B, cache_len, tp, compute_dtype)
+        if cfg.uses_attention:
+            W = cache_len
+            if S <= W:
+                cache["k"] = lax.dynamic_update_slice_in_dim(
+                    cache["k"], caches["k"].astype(compute_dtype), 0, axis=2)
+                cache["v"] = lax.dynamic_update_slice_in_dim(
+                    cache["v"], caches["v"].astype(compute_dtype), 0, axis=2)
+                pos_row = jnp.where(jnp.arange(W) < S, jnp.arange(W), -1)
+            else:  # ring buffer: keep last W entries at rotated slots
+                keep_k = caches["k"][:, :, S - W:]
+                keep_v = caches["v"][:, :, S - W:]
+                abs_pos = jnp.arange(S - W, S)
+                slots = abs_pos % W
+                order = jnp.argsort(slots)
+                cache["k"] = keep_k[:, :, order].astype(compute_dtype)
+                cache["v"] = keep_v[:, :, order].astype(compute_dtype)
+                pos_row = abs_pos[order]
+            cache["pos"] = jnp.broadcast_to(pos_row,
+                                            (cfg.num_layers, cache_len))
+        if cfg.block in (BLOCK_SSM, BLOCK_HYBRID):
+            cache["conv"] = caches["conv"].astype(compute_dtype)
+            cache["ssm"] = caches["ssm"]
+        w_out = lm_head_weight(cfg, params).astype(compute_dtype)
+        logits = (hidden[:, -1, :] @ w_out).astype(jnp.float32)
+        vocab_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        return jnp.where(vocab_ok, logits, L.NEG_INF), cache
+
+    return prefill
+
+
+def _decode_attn(cfg, p, xn, layer_cache, pos, is_global, tp):
+    """One-token attention against the cache. xn (B,1,d)."""
+    B = xn.shape[0]
+    W = layer_cache["k"].shape[1]  # (B, W, Gs, hd)
+    gs = layer_cache["k"].shape[2]
+    positions = jnp.full((1,), pos)
+    q, k, v = L.project_qkv(p, xn, cfg, positions,
+                            kv_positions=positions)
+    kc = L.repeat_kv(k, gs)
+    vc = L.repeat_kv(v, gs)
+    slot = pos % W
+    new_k = lax.dynamic_update_slice_in_dim(layer_cache["k"], kc, slot, axis=1)
+    new_v = lax.dynamic_update_slice_in_dim(layer_cache["v"], vc, slot, axis=1)
+    new_pos = lax.dynamic_update_slice_in_dim(
+        layer_cache["pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0)
+
+    # grouped attention: q (B,1,Gs,R,hd) x cache (B,W,Gs,hd)
+    R = cfg.num_heads // gs
+    qg = q.reshape(B, 1, gs, R, cfg.head_dim)
+    s = jnp.einsum("bqgrk,btgk->bgrqt", qg, new_k).astype(jnp.float32)
+    s = s / math.sqrt(cfg.head_dim)
+    if cfg.logit_softcap > 0:
+        s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
+    kpos = new_pos  # (W,)
+    okay = (kpos >= 0) & (kpos <= pos)
+    if cfg.swa_window > 0:
+        win_ok = kpos > pos - cfg.swa_window
+        okay = okay & jnp.where(is_global, True, win_ok)
+    s = s + jnp.where(okay, 0.0, L.NEG_INF)[None, None, None, None, :]
+    prob = jax.nn.softmax(s, axis=-1).astype(xn.dtype)
+    ctx = jnp.einsum("bgrqt,btgk->bqgrk", prob, new_v)
+    ctx = ctx.reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    out = L.attn_output(p, ctx, xn.dtype)
+    return out, {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+def make_decode_step(cfg: ModelConfig, knobs, tp: int):
+    compute_dtype = L.dtype_of(knobs["compute_dtype"])
+    flags = layer_flags(cfg)
+
+    def decode_step(params, cache, token, pos):
+        """token (B,1) int32, pos scalar int32 -> (logits (B,Vp), cache).
+
+        The cache rides in the scan CARRY and is updated in place per layer
+        (dynamic_update_index on the stacked buffers): XLA's while-loop
+        in-place analysis then aliases it end-to-end with the donated input
+        — passing it as scan xs/ys instead costs 2 extra full-cache copies
+        (observed +52GB on qwen3 decode_32k; EXPERIMENTS.md §Perf).
+        """
+        x = embed_tokens(cfg, params, token, compute_dtype)
+
+        def layer_slice(tree, idx):
+            return jax.tree_util.tree_map(
+                lambda c: lax.dynamic_index_in_dim(c, idx, 0, keepdims=False),
+                tree)
+
+        def layer_put(tree, new, idx):
+            return jax.tree_util.tree_map(
+                lambda c, n: lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), idx, 0), tree, new)
+
+        def body(carry, xs):
+            h, cch = carry
+            p_l, flag, idx = xs
+            cache_l = layer_slice(cch, idx)
+            new_cache: Dict[str, Any] = {}
+            xn = L.apply_norm(h, p_l["ln1"], cfg)
+            if cfg.block == BLOCK_SSM:
+                out, st = mamba.ssm_decode_step(
+                    p_l["ssm"], xn, {"conv": cache_l["conv"],
+                                     "ssm": cache_l["ssm"]}, cfg)
+                h = h + out
+                new_cache.update(st)
+            elif cfg.block == BLOCK_HYBRID:
+                a_out, a_cache = _decode_attn(cfg, p_l["attn"], xn, cache_l,
+                                              pos, flag, tp)
+                s_out, st = mamba.ssm_decode_step(
+                    p_l["ssm"], xn, {"conv": cache_l["conv"],
+                                     "ssm": cache_l["ssm"]}, cfg)
+                a_out = L.rmsnorm(a_out, p_l["attn_out_norm"], eps=cfg.norm_eps)
+                s_out = L.rmsnorm(s_out, p_l["ssm_out_norm"], eps=cfg.norm_eps)
+                h = h + 0.5 * (a_out + s_out)
+                new_cache.update(a_cache)
+                new_cache.update(st)
+            else:
+                a_out, a_cache = _decode_attn(cfg, p_l["attn"], xn, cache_l,
+                                              pos, flag, tp)
+                h = h + a_out
+                new_cache.update(a_cache)
+            if cfg.block in (BLOCK_DENSE, BLOCK_HYBRID):
+                h = h + L.mlp_apply(p_l["mlp"],
+                                    L.apply_norm(h, p_l["ln2"], cfg), cfg)
+            elif cfg.block == BLOCK_MOE:
+                m_out, _ = moe.moe_apply(p_l["moe"],
+                                         L.apply_norm(h, p_l["ln2"], cfg), cfg)
+                h = h + m_out
+            return (h, layer_put(cch, new_cache, idx)), None
+
+        (x, new_cache), _ = lax.scan(
+            body, (x, cache),
+            (params["blocks"], flags, jnp.arange(cfg.num_layers)))
+        x = L.apply_norm(x, params["final_norm"], cfg)
+        w_out = lm_head_weight(cfg, params).astype(compute_dtype)
+        logits = (x[:, 0, :] @ w_out).astype(jnp.float32)
+        vocab_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        return jnp.where(vocab_ok, logits, L.NEG_INF), new_cache
+
+    return decode_step

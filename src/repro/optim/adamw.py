@@ -1,0 +1,80 @@
+"""AdamW, pure JAX, mixed-precision aware.
+
+State keeps float32 first/second moments plus a float32 master copy of the
+parameters when the model runs in a lower precision (bf16) — the standard
+large-model recipe. All state leaves mirror the parameter tree, so the
+parameter PartitionSpecs apply verbatim (ZeRO-style sharded optimizer state
+falls out of FSDP-sharded params for free).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any          # float32 master params (None leaves if fp32 model)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    needs_master = any(p.dtype != jnp.float32
+                       for p in jax.tree_util.tree_leaves(params))
+    master = (jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+              if needs_master else None)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros),
+                      master=master)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, beta1=0.9,
+                 beta2=0.95, eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.where(grad_clip > 0,
+                      jnp.minimum(1.0, grad_clip / (gnorm + 1e-9)), 1.0)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+    lr_t = jnp.asarray(lr, jnp.float32)
+
+    def upd(g, m, v, p, master):
+        g = g.astype(jnp.float32) * scale
+        m = beta1 * m + (1 - beta1) * g
+        v = beta2 * v + (1 - beta2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        base = master if master is not None else p.astype(jnp.float32)
+        new = base - lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                             + weight_decay * base)
+        return new.astype(p.dtype), m, v, new
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_p = treedef.flatten_up_to(params)
+    flat_master = (treedef.flatten_up_to(state.master)
+                   if state.master is not None else [None] * len(flat_p))
+    out = [upd(g, m, v, p, ms) for g, m, v, p, ms
+           in zip(flat_g, flat_m, flat_v, flat_p, flat_master)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_master = (treedef.unflatten([o[3] for o in out])
+                  if state.master is not None else None)
+    new_state = AdamWState(step=step, m=new_m, v=new_v, master=new_master)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr_t}

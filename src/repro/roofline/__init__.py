@@ -1,0 +1,2 @@
+from repro.roofline.hw import V5E  # noqa: F401
+from repro.roofline.analysis import analyze_compiled, parse_collectives  # noqa: F401

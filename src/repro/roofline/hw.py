@@ -1,0 +1,25 @@
+"""Target hardware constants (TPU v5e, per assignment)."""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops_bf16: float     # FLOP/s per chip
+    hbm_bw: float              # bytes/s per chip
+    ici_link_bw: float         # bytes/s per ICI link
+    dcn_bw: float              # bytes/s per host, inter-pod
+    hbm_bytes: float           # capacity per chip
+    vmem_bytes: float
+
+
+V5E = HW(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    dcn_bw=6.25e9,
+    hbm_bytes=16 * 2**30,
+    vmem_bytes=128 * 2**20,
+)

@@ -1,0 +1,57 @@
+"""Batched serving engine: prefill + greedy/temperature decode over the
+model bundle's cached decode_step.
+
+Straightforward static-batch engine with per-sequence done-masking (EOS).
+The decode loop is a host loop over a jit'd step (donated cache) — at test
+scale this is the right trade-off; the dry-run cells lower the same
+``decode_step`` that this engine drives.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Engine:
+    def __init__(self, model, params, cache_len: int, eos_id: int = -1):
+        self.model = model
+        self.params = params
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len))
+        self._step = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    def generate(self, batch, max_new_tokens: int, *,
+                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+        """batch: model input dict (prompt). Returns (B, max_new) tokens."""
+        logits, cache = self._prefill(self.params, batch)
+        B = logits.shape[0]
+        prompt_len = batch["tokens"].shape[1]
+        if self.model.cfg.frontend == "patch_stub":
+            prompt_len += self.model.cfg.num_frontend_tokens
+        key = jax.random.PRNGKey(seed)
+        out = np.zeros((B, max_new_tokens), np.int32)
+        done = np.zeros((B,), bool)
+        tok = self._sample(logits, temperature, key)
+        for t in range(max_new_tokens):
+            out[:, t] = np.where(done, self.eos_id, np.asarray(tok)[:, 0])
+            if self.eos_id >= 0:
+                done |= out[:, t] == self.eos_id
+                if done.all():
+                    break
+            pos = jnp.int32(prompt_len + t)
+            logits, cache = self._step(self.params, cache, tok, pos)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, temperature, sub)
+        return out
+
+    def _sample(self, logits, temperature: float, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return jax.random.categorical(
+            key, logits / temperature, -1).astype(jnp.int32)[:, None]

@@ -1,0 +1,2 @@
+from repro.train.trainer import TrainState, make_train_step, init_train_state  # noqa: F401
+from repro.train import checkpoint  # noqa: F401

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS device-count override here — smoke tests and benches run
+# on the single real CPU device. Multi-device tests spawn subprocesses (see
+# tests/helpers.py) so jax's device-count lock never constrains the suite.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,32 @@
+"""Subprocess runner for multi-device tests.
+
+JAX locks the device count at first backend init, and conftest keeps the
+main pytest process at 1 CPU device (per the dry-run isolation rule). Tests
+that need an N-device mesh run a named case from tests/mp_cases.py in a
+fresh subprocess with XLA_FLAGS set.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_case(case: str, ndev: int = 8, timeout: int = 300, args=()) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), ROOT, env.get("PYTHONPATH", "")])
+    proc = subprocess.run(
+        [sys.executable, "-m", "tests.mp_cases", case, *map(str, args)],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=ROOT)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"case {case!r} failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    assert "CASE-OK" in proc.stdout, proc.stdout
+    return proc.stdout

@@ -1,0 +1,407 @@
+"""Multi-device test cases, executed in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=N (see tests/helpers.py).
+
+Each case asserts internally and prints CASE-OK on success.
+"""
+
+import os
+import sys
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from functools import partial
+
+
+def _flat_mesh(n=8):
+    return jax.make_mesh((n,), ("ranks",))
+
+
+def _hier_mesh(n=2, m=4):
+    return jax.make_mesh((n, m), ("proc", "thread"))
+
+
+# ---------------------------------------------------------------------------
+
+def case_collectives_flat():
+    from repro.core import collectives as coll
+    n = 8
+    mesh = _flat_mesh(n)
+    x = jnp.arange(n, dtype=jnp.float32) + 1.0          # rank r holds r+1
+
+    def run(fn, inp=x, out_specs=P("ranks")):
+        return jax.shard_map(fn, mesh=mesh, in_specs=P("ranks"),
+                             out_specs=out_specs)(inp)
+
+    # barrier (msg): output token must be max over all ranks
+    tok = run(lambda v: coll.barrier(v[0], "ranks", mode="msg")[None])
+    assert np.allclose(np.asarray(tok), n), tok
+    tok = run(lambda v: coll.barrier(v[0], "ranks", mode="atomic")[None])
+    assert np.allclose(np.asarray(tok), n), tok
+
+    # reduce (binomial) to root 0 and root 3
+    total = float(n * (n + 1) / 2)
+    for root in (0, 3):
+        r = run(lambda v: coll.reduce(v, "ranks", root=root,
+                                      schedule="binomial"))
+        assert np.asarray(r)[root] == total, (root, r)
+
+    # bcast from root 5: everyone ends with 6.0
+    b = run(lambda v: coll.bcast(v, "ranks", root=5))
+    assert np.allclose(np.asarray(b), 6.0), b
+
+    # allreduce schedules agree with psum
+    for schedule in ("psum", "recursive_doubling", "ring", "reduce_bcast"):
+        big = jnp.arange(n * 24, dtype=jnp.float32).reshape(n, 24)
+        out = jax.shard_map(
+            lambda v: coll.allreduce(v, "ranks", schedule=schedule),
+            mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"))(big)
+        want = np.tile(np.asarray(big).reshape(n, 24).sum(0), (n, 1))
+        got = np.asarray(out).reshape(n, 24)
+        assert np.allclose(got, want, rtol=1e-5), (schedule, got[:, :4])
+
+    # allgather / reduce_scatter round trip == psum
+    vec = jnp.arange(n * 4, dtype=jnp.float32)
+    rs_ag = jax.shard_map(
+        lambda v: coll.allgather(coll.reduce_scatter(v, "ranks"), "ranks"),
+        mesh=mesh, in_specs=P(None), out_specs=P(None), check_vma=False)(vec)
+    assert np.allclose(np.asarray(rs_ag), np.asarray(vec) * n)
+
+    # alltoall: transpose of rank/chunk grid
+    mat = jnp.arange(n * n, dtype=jnp.float32).reshape(n, n)
+    a2a = jax.shard_map(
+        lambda v: coll.alltoall(v.reshape(n, 1), "ranks").reshape(1, n),
+        mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"))(mat)
+    assert np.allclose(np.asarray(a2a), np.asarray(mat).T)
+
+    # sendrecv: explicit pairs (ring shift by 2)
+    pairs = [(i, (i + 2) % n) for i in range(n)]
+    sr = jax.shard_map(lambda v: coll.sendrecv(v, "ranks", pairs),
+                       mesh=mesh, in_specs=P("ranks"),
+                       out_specs=P("ranks"))(x)
+    want = np.roll(np.asarray(x), 2)
+    assert np.allclose(np.asarray(sr), want), sr
+    print("CASE-OK")
+
+
+def case_threadcomm_unified():
+    from repro.core import threadcomm_init, ThreadCommError
+    from repro.core import collectives as coll
+    n_proc, m_thread = 2, 4
+    mesh = _hier_mesh(n_proc, m_thread)
+    tc = threadcomm_init(mesh, process_axes=("proc",),
+                         thread_axes=("thread",), num_threads=m_thread)
+    assert tc.size == n_proc * m_thread
+    assert tc.num_processes == n_proc and tc.threads_per_process == m_thread
+
+    # process-major rank ordering (paper §2): rank = proc*M + thread
+    assert tc.rank_of({"proc": 1, "thread": 2}) == 6
+    assert tc.coords_of(6) == {"thread": 2, "proc": 1}
+    assert tc.process_of(5) == 1
+
+    # inactive comm refuses to communicate
+    try:
+        tc.allreduce(jnp.ones(4))
+        raise SystemExit("inactive comm should have raised")
+    except ThreadCommError:
+        pass
+
+    with tc.start():
+        # Listing 1/2 reproduction: every device reports rank/size
+        ranks = tc.run(lambda x: x + tc.device_rank().astype(jnp.float32),
+                       jnp.zeros(tc.size))
+        assert np.allclose(np.sort(np.asarray(ranks)), np.arange(tc.size))
+
+        # unified flat allreduce == psum over all axes
+        x = jnp.arange(tc.size, dtype=jnp.float32)
+        out = tc.run(lambda v: tc.allreduce(v, schedule="recursive_doubling"),
+                     x)
+        assert np.allclose(np.asarray(out), np.asarray(x).sum())
+
+        # hierarchical == flat (numerics), vector length coprime to M
+        vec = jnp.arange(tc.size * 13, dtype=jnp.float32).reshape(tc.size, 13)
+        h = tc.run(lambda v: tc.allreduce(v, schedule="hierarchical"), vec)
+        f = tc.run(lambda v: tc.allreduce(v, schedule="psum"), vec)
+        assert np.allclose(np.asarray(h), np.asarray(f), rtol=1e-5)
+
+        g = tc.group(list(range(4)))
+        assert g.size == 4 and g.translate(2) == 2
+        tc.set_attr("petsc", 42)
+        assert tc.get_attr("petsc") == 42
+
+    # derived objects die at finish (paper lifetime rule)
+    with tc.start():
+        try:
+            g.size
+            raise SystemExit("stale group should have raised")
+        except ThreadCommError:
+            pass
+        assert tc.get_attr("petsc") is None
+
+    # nested start forbidden; free-while-active forbidden
+    with tc.start():
+        try:
+            tc.start().__enter__()
+            raise SystemExit("nested start should have raised")
+        except ThreadCommError:
+            pass
+    tc.free()
+    try:
+        tc.allreduce(jnp.ones(3))
+        raise SystemExit("freed comm should have raised")
+    except ThreadCommError:
+        pass
+    print("CASE-OK")
+
+
+def case_p2p_protocols():
+    from repro.core import p2p
+    n = 8
+    mesh = _flat_mesh(n)
+    pairs = [(i, (i + 1) % n) for i in range(n)]
+
+    for elems, want_proto in ((64, "eager_fast"), (1024, "eager_fast"),
+                              (1 << 16, "one_copy")):
+        x = jnp.arange(n * elems, dtype=jnp.float32).reshape(n, elems)
+
+        def f(v):
+            recv, _ = p2p.send_recv(v, "ranks", pairs)
+            return recv
+
+        out = jax.shard_map(f, mesh=mesh, in_specs=P("ranks"),
+                            out_specs=P("ranks"))(x)
+        want = np.roll(np.asarray(x), 1, axis=0)
+        assert np.allclose(np.asarray(out), want), elems
+        from repro.core import protocol
+        assert protocol.select_protocol(elems * 4) == want_proto, elems
+
+    # halo exchange
+    x = jnp.arange(n * 4, dtype=jnp.float32).reshape(n, 4)
+
+    def g(v):
+        fl, fr = p2p.halo_exchange_1d(v, "ranks", n)
+        return jnp.concatenate([fl, fr], 0)
+
+    out = jax.shard_map(g, mesh=mesh, in_specs=P("ranks"),
+                        out_specs=P("ranks"))(x)
+    out = np.asarray(out).reshape(n, 2, 4)
+    xs = np.asarray(x).reshape(n, 1, 4)
+    for i in range(n):
+        assert np.allclose(out[i, 0], xs[(i - 1) % n, -1])  # from left
+        assert np.allclose(out[i, 1], xs[(i + 1) % n, 0])   # from right
+    print("CASE-OK")
+
+
+def case_hierarchical_collective_bytes():
+    """Hierarchical allreduce must emit smaller inter-process (slow-axis)
+    collectives than flat: check the lowered HLO collective structure."""
+    from repro.core import collectives as coll
+    mesh = _hier_mesh(2, 4)
+    nbytes = 4 * 1024
+    x = jnp.zeros(8 * nbytes // 4, jnp.float32)
+
+    def flat(v):
+        return lax.psum(v, ("proc", "thread"))
+
+    def hier(v):
+        return coll.hierarchical_allreduce(v, process_axes=("proc",),
+                                           thread_axes=("thread",))
+
+    def hlo(fn):
+        return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P(None),
+                                     out_specs=P(None), check_vma=False)
+                       ).lower(x).compile().as_text()
+
+    flat_txt, hier_txt = hlo(flat), hlo(hier)
+    assert "all-reduce" in flat_txt
+    assert "reduce-scatter" in hier_txt and "all-gather" in hier_txt
+    print("CASE-OK")
+
+
+def case_grad_sync_parity():
+    """spmd / threadcomm / flat grad-sync modes must produce the same
+    training trajectory (they differ only in collective schedule)."""
+    from repro.config import MeshConfig, TrainConfig, ServeConfig
+    from repro.configs import get_smoke_config
+    from repro.data import SyntheticPipeline
+    from repro.models.registry import build_model
+    from repro.train.trainer import init_train_state, make_train_step
+    from repro.dist.sharding import batch_pspec
+    from jax.sharding import NamedSharding
+
+    cfg = get_smoke_config("yi-9b")
+    mesh_cfg = MeshConfig(shape=(2, 2, 2),
+                          axis_names=("pod", "data", "model"),
+                          process_axes=("pod",))
+    mesh = jax.make_mesh(mesh_cfg.shape, mesh_cfg.axis_names)
+    pipe = SyntheticPipeline(cfg, batch=8, seq_len=16, seed=0)
+    b_shard = NamedSharding(mesh, batch_pspec(mesh_cfg))
+
+    from repro.train.explicit import init_explicit_state
+
+    losses = {}
+    for mode in ("spmd", "threadcomm", "flat"):
+        tcfg = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                           loss_chunk=16, attn_chunk_threshold=64,
+                           remat=False, grad_sync=mode, learning_rate=1e-2,
+                           warmup_steps=1, total_steps=10)
+        model = build_model(cfg, tcfg, ServeConfig(), tp=2)
+        if mode == "spmd":
+            state = init_train_state(model, jax.random.PRNGKey(0))
+            step = jax.jit(make_train_step(model, mesh_cfg, tcfg))
+        else:
+            state = init_explicit_state(model, jax.random.PRNGKey(0), dp=4)
+            step = make_train_step(model, mesh_cfg, tcfg, mesh=mesh)
+        ls = []
+        for i in range(3):
+            batch = {k: jax.device_put(jnp.asarray(v), b_shard)
+                     for k, v in pipe.get_batch(i).items()}
+            state, metrics = step(state, batch)
+            ls.append(float(metrics["loss"]))
+        losses[mode] = ls
+    for mode in ("threadcomm", "flat"):
+        assert np.allclose(losses[mode], losses["spmd"],
+                           rtol=1e-4, atol=1e-4), losses
+    print("losses:", losses)
+    print("CASE-OK")
+
+
+def case_elastic_remesh():
+    """Checkpoint written under one mesh restores onto a different mesh
+    shape with identical values (elastic re-mesh)."""
+    import tempfile
+    from repro.config import MeshConfig, TrainConfig, ServeConfig
+    from repro.configs import get_smoke_config
+    from repro.models.registry import build_model
+    from repro.train import checkpoint as ckpt
+    from repro.train.trainer import init_train_state
+    from repro.dist.sharding import param_pspecs, named_sharding
+
+    cfg = get_smoke_config("qwen3-14b")
+    tcfg = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                       remat=False)
+    model = build_model(cfg, tcfg, ServeConfig(), tp=4)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+
+    mesh_a_cfg = MeshConfig(shape=(2, 4), axis_names=("data", "model"))
+    mesh_b_cfg = MeshConfig(shape=(4, 2), axis_names=("data", "model"))
+    mesh_a = jax.make_mesh(mesh_a_cfg.shape, mesh_a_cfg.axis_names)
+    mesh_b = jax.make_mesh(mesh_b_cfg.shape, mesh_b_cfg.axis_names)
+
+    spec_a = param_pspecs(cfg, mesh_a_cfg, state.params)
+    params_a = jax.device_put(state.params,
+                              named_sharding(mesh_a, spec_a))
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 5, params_a, extra={"mesh": list(mesh_a_cfg.shape)})
+        spec_b = param_pspecs(cfg, mesh_b_cfg, state.params)
+        restored, step, extra = ckpt.restore(
+            d, state.params, shardings=named_sharding(mesh_b, spec_b))
+        assert step == 5 and extra["mesh"] == [2, 4]
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b)), state.params, restored)
+        # restored arrays live on the NEW mesh
+        leaf = jax.tree_util.tree_leaves(restored)[0]
+        assert leaf.sharding.mesh.shape == dict(data=4, model=2)
+    print("CASE-OK")
+
+
+def case_spmv_distributed():
+    """Slab-decomposed 27pt stencil MatMult over 8 unified ranks == oracle,
+    for several cube sizes (halo exchange via threadcomm p2p)."""
+    from repro.apps.spmv import make_distributed_matmult, stencil_matmult_ref
+    for n in (8, 16, 24):
+        mesh = _flat_mesh(8)
+        x = jax.random.normal(jax.random.PRNGKey(n), (n, n, n))
+        mm = make_distributed_matmult("ranks", 8)
+        y = jax.jit(jax.shard_map(mm, mesh=mesh, in_specs=P("ranks"),
+                                  out_specs=P("ranks")))(x)
+        ref = stencil_matmult_ref(x)
+        assert np.allclose(np.asarray(y), np.asarray(ref), atol=1e-4), n
+    # hierarchical mesh too: (2 proc x 4 thread) unified ranks
+    from repro.core import threadcomm_init
+    mesh = _hier_mesh(2, 4)
+    tc = threadcomm_init(mesh, process_axes=("proc",),
+                         thread_axes=("thread",))
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 16, 16))
+    with tc.start():
+        mm = make_distributed_matmult(tc.unified_axes, tc.size)
+        y = tc.run(mm, x)
+    assert np.allclose(np.asarray(y), np.asarray(stencil_matmult_ref(x)),
+                       atol=1e-4)
+    print("CASE-OK")
+
+
+def case_grad_compression_parity():
+    """bf16 inter-pod gradient wire (threadcomm, §Perf cell A iter.2) must
+    track the f32 trajectory within bf16 tolerance."""
+    from repro.config import MeshConfig, TrainConfig, ServeConfig
+    from repro.configs import get_smoke_config
+    from repro.data import SyntheticPipeline
+    from repro.models.registry import build_model
+    from repro.train.trainer import make_train_step
+    from repro.train.explicit import init_explicit_state
+    from repro.dist.sharding import batch_pspec
+    from jax.sharding import NamedSharding
+
+    cfg = get_smoke_config("yi-9b")
+    mesh_cfg = MeshConfig(shape=(2, 2, 2),
+                          axis_names=("pod", "data", "model"),
+                          process_axes=("pod",))
+    mesh = jax.make_mesh(mesh_cfg.shape, mesh_cfg.axis_names)
+    pipe = SyntheticPipeline(cfg, batch=8, seq_len=16, seed=0)
+    b_shard = NamedSharding(mesh, batch_pspec(mesh_cfg))
+    losses = {}
+    for wire in ("float32", "bfloat16"):
+        tcfg = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                           loss_chunk=16, attn_chunk_threshold=64,
+                           remat=False, grad_sync="threadcomm",
+                           grad_comm_dtype=wire, learning_rate=1e-2,
+                           warmup_steps=1, total_steps=10)
+        model = build_model(cfg, tcfg, ServeConfig(), tp=2)
+        state = init_explicit_state(model, jax.random.PRNGKey(0), dp=4)
+        step = make_train_step(model, mesh_cfg, tcfg, mesh=mesh)
+        ls = []
+        for i in range(3):
+            batch = {k: jax.device_put(jnp.asarray(v), b_shard)
+                     for k, v in pipe.get_batch(i).items()}
+            state, metrics = step(state, batch)
+            ls.append(float(metrics["loss"]))
+        losses[wire] = ls
+    assert np.allclose(losses["bfloat16"], losses["float32"],
+                       rtol=2e-2, atol=2e-2), losses
+    print("losses:", losses)
+    print("CASE-OK")
+
+
+def case_dryrun_smoke():
+    """Reduced-config dry-run cells lower+compile on the production meshes
+    (the full configs run via launch/dryrun.py --all)."""
+    import tempfile
+    os.environ["REPRO_ARTIFACT_DIR"] = tempfile.mkdtemp()
+    from repro.launch.dryrun import run_cell
+    for arch, shape, mesh in (("gemma-2b", "train_4k", "single_pod"),
+                              ("mamba2-370m", "decode_32k", "multi_pod"),
+                              ("olmoe-1b-7b", "train_4k", "multi_pod")):
+        res = run_cell(arch, shape, mesh, smoke=True, verbose=False)
+        assert "analysis" in res, (arch, shape, mesh)
+        assert res["analysis"]["terms"]["compute_s"] > 0
+    print("CASE-OK")
+
+
+CASES = {k[5:]: v for k, v in list(globals().items())
+         if k.startswith("case_")}
+
+
+def main():
+    name = sys.argv[1]
+    CASES[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Dry-run integration (reduced configs, production meshes, subprocess with
+512 host devices) + roofline analysis unit tests on synthetic HLO."""
+
+import numpy as np
+
+from repro.roofline.analysis import parse_collectives, summarize_collectives
+from repro.roofline.hlo_struct import computation_multipliers
+from tests.helpers import run_case
+
+FAKE_HLO = """
+HloModule test
+
+%while_cond.1 (p: s32[]) -> pred[] {
+  %p = s32[] parameter(0)
+  %c = s32[] constant(48)
+  ROOT %cmp = pred[] compare(%p, %c), direction=LT
+}
+
+%while_body.1 (p: f32[128]) -> f32[128] {
+  %p2 = f32[128] parameter(0)
+  %ag = f32[256]{0} all-gather(%p2), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[128]{0} all-reduce(%p2), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %out = f32[128]{0} add(%p2, %ar)
+}
+
+ENTRY %main (x: f32[128]) -> f32[128] {
+  %x = f32[128] parameter(0)
+  %w = f32[128]{0} while(%x), condition=%while_cond.1, body=%while_body.1
+  %cp = f32[64]{0} collective-permute(%x), source_target_pairs={{0,1}}
+  ROOT %r = f32[128]{0} add(%w, %x)
+}
+"""
+
+
+def test_while_trip_multipliers():
+    mult = computation_multipliers(FAKE_HLO)
+    assert mult["while_body.1"] == 48
+    assert mult.get("main", 1) == 1
+
+
+def test_collective_parsing_with_trips():
+    colls = parse_collectives(FAKE_HLO)
+    by_op = {c["op"]: c for c in colls}
+    # all-gather: operand = out/g = 256*4/16 = 64 bytes; 48 executions
+    ag = by_op["all-gather"]
+    assert ag["group_size"] == 16 and ag["trip_multiplier"] == 48
+    np.testing.assert_allclose(ag["operand_bytes"], 256 * 4 / 16)
+    np.testing.assert_allclose(ag["total_operand_bytes"], 64 * 48)
+    ar = by_op["all-reduce"]
+    assert ar["group_size"] == 4
+    np.testing.assert_allclose(ar["total_operand_bytes"], 128 * 4 * 48)
+    cp = by_op["collective-permute"]
+    assert cp["trip_multiplier"] == 1
+    s = summarize_collectives(colls)
+    assert s["total"]["sites"] == 3
+    assert s["total"]["executions"] == 48 + 48 + 1
+
+
+def test_dryrun_smoke_cells():
+    run_case("dryrun_smoke", ndev=512, timeout=900)
+
+
+def test_analytic_flops_sane():
+    """6ND sanity: analytical computed FLOPs within ~1.2-10x of 6ND for a
+    dense train cell (remat + dense-computed attention overhead)."""
+    from repro.config import SHAPES
+    from repro.configs import get_config
+    from repro.roofline.flops import cell_compute_flops
+    cfg = get_config("yi-9b")
+    out = cell_compute_flops(cfg, SHAPES["train_4k"])
+    ratio = out["computed"] / out["model_flops"]
+    assert 1.0 < ratio < 10.0, ratio
+
+
+def test_memory_bytes_decode_dominated_by_weights_or_cache():
+    from repro.config import SHAPES
+    from repro.configs import get_config
+    from repro.config import MULTI_POD
+    from repro.roofline.flops import cell_memory_bytes
+    cfg = get_config("yi-9b")
+    d = cell_memory_bytes(cfg, SHAPES["decode_32k"], MULTI_POD)
+    assert d["weights"] + d["cache"] > 0.8 * d["bytes"]

@@ -1,0 +1,7 @@
+"""bf16 inter-pod gradient compression (threadcomm trainer) parity."""
+
+from tests.helpers import run_case
+
+
+def test_grad_compression_parity():
+    run_case("grad_compression_parity", ndev=8, timeout=600)

@@ -1,0 +1,196 @@
+"""Layer-level properties: chunked-vs-dense attention equivalence, chunked
+cross-entropy vs direct, RoPE invariants, MoE routing invariants —
+hypothesis-driven where shapes permit."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([16, 32, 48, 64]), st.sampled_from([8, 16, 32]),
+       st.sampled_from([None, 8, 24]), st.booleans())
+@settings(max_examples=12, deadline=None)
+def test_chunked_equals_full_attention(S, chunk, window, causal):
+    ks = jax.random.split(jax.random.PRNGKey(S + chunk), 3)
+    q = jax.random.normal(ks[0], (2, S, 3, 8))
+    k = jax.random.normal(ks[1], (2, S, 3, 8))
+    v = jax.random.normal(ks[2], (2, S, 3, 8))
+    pos = jnp.arange(S)
+    # window without causality can fully mask early rows; keep causal then
+    if not causal and window is not None:
+        causal = True
+    full = L.full_attention(q, k, v, q_pos=pos, k_pos=pos, causal=causal,
+                            window=window)
+    chk = L.chunked_attention(q, k, v, q_pos=pos, k_pos=pos, causal=causal,
+                              window=window, chunk_q=chunk, chunk_k=chunk)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chk),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_chunked_attention_cross_lengths():
+    """Sq != Sk (prefill continuation) and non-divisible chunking."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 24, 2, 8))
+    k = jax.random.normal(ks[1], (1, 56, 2, 8))
+    v = jax.random.normal(ks[2], (1, 56, 2, 8))
+    q_pos = jnp.arange(32, 56)
+    k_pos = jnp.arange(56)
+    full = L.full_attention(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=True)
+    chk = L.chunked_attention(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=True,
+                              chunk_q=16, chunk_k=16)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chk),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_attention_grads_finite_through_chunks():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 8))
+    k = jax.random.normal(ks[1], (1, 32, 2, 8))
+    v = jax.random.normal(ks[2], (1, 32, 2, 8))
+    pos = jnp.arange(32)
+
+    def f(q):
+        return jnp.sum(L.chunked_attention(q, k, v, q_pos=pos, k_pos=pos,
+                                           causal=True, chunk_q=8,
+                                           chunk_k=8) ** 2)
+
+    g = jax.grad(f)(q)
+    assert jnp.all(jnp.isfinite(g))
+    assert jnp.any(g != 0)
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([8, 24, 32]), st.sampled_from([4, 8, 16]),
+       st.sampled_from([50, 64]))
+@settings(max_examples=10, deadline=None)
+def test_chunked_ce_equals_direct(S, chunk, V):
+    key = jax.random.PRNGKey(S * chunk)
+    ks = jax.random.split(key, 3)
+    B, d, Vp = 2, 16, 64
+    h = jax.random.normal(ks[0], (B, S, d))
+    w = jax.random.normal(ks[1], (d, Vp)) * 0.1
+    labels = jax.random.randint(ks[2], (B, S), 0, V)
+    valid = labels >= (V // 4)   # some invalid rows
+    loss_sum, n_valid = L.chunked_cross_entropy(
+        h, w, labels, valid=valid, vocab_size=V, chunk=chunk)
+    # direct reference
+    logits = (h @ w).astype(jnp.float32)
+    logits = jnp.where(jnp.arange(Vp) < V, logits, L.NEG_INF)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    ref = jnp.sum((lse - gold) * valid)
+    np.testing.assert_allclose(float(loss_sum), float(ref), rtol=1e-5)
+    assert float(n_valid) == float(valid.sum())
+
+
+def test_ce_padded_vocab_never_predicted():
+    """Padded vocab ids must carry ~zero probability mass."""
+    B, S, d, V, Vp = 1, 4, 8, 10, 16
+    h = jax.random.normal(jax.random.PRNGKey(0), (B, S, d))
+    w = jnp.zeros((d, Vp)).at[:, V:].set(100.0)   # push mass onto padding
+    labels = jnp.zeros((B, S), jnp.int32)
+    loss_sum, _ = L.chunked_cross_entropy(
+        h, w, labels, valid=jnp.ones((B, S), bool), vocab_size=V, chunk=2)
+    # if padding leaked, loss would be ~100+; masked it's ~log(10)
+    assert float(loss_sum) / (B * S) < 5.0
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([8, 16, 64]), st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_rope_preserves_norm_and_relativity(hd, offset):
+    """RoPE is a rotation (norm-preserving) and q·k depends only on the
+    relative distance."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(hd))
+    q = jax.random.normal(k1, (1, 1, 1, hd))
+    k = jax.random.normal(k2, (1, 1, 1, hd))
+
+    def rot(x, pos):
+        cos, sin = L.rope_cos_sin(jnp.array([pos]), hd, 10_000.0)
+        return L.apply_rope(x, cos, sin)
+
+    # norm preservation
+    np.testing.assert_allclose(float(jnp.linalg.norm(rot(q, offset))),
+                               float(jnp.linalg.norm(q)), rtol=1e-5)
+    # relative property: <R(q,m), R(k,n)> == <R(q,m+s), R(k,n+s)>
+    d1 = float(jnp.vdot(rot(q, 5), rot(k, offset)))
+    d2 = float(jnp.vdot(rot(q, 5 + 17), rot(k, offset + 17)))
+    np.testing.assert_allclose(d1, d2, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def _moe_cfg(**kw):
+    from repro.configs import get_smoke_config
+    import dataclasses
+    return dataclasses.replace(get_smoke_config("olmoe-1b-7b"), **kw)
+
+
+def test_moe_dropless_at_high_capacity():
+    from repro.models import moe
+    cfg = _moe_cfg(capacity_factor=8.0, moe_group_size=64)
+    p = moe.init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    out, aux = moe.moe_apply(p, x, cfg)
+    assert out.shape == x.shape
+    assert float(aux["moe_dropped"]) == 0.0
+    assert jnp.all(jnp.isfinite(out))
+
+
+def test_moe_drops_at_tiny_capacity():
+    from repro.models import moe
+    cfg = _moe_cfg(capacity_factor=0.1, moe_group_size=64)
+    p = moe.init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    out, aux = moe.moe_apply(p, x, cfg)
+    assert float(aux["moe_dropped"]) > 0.0
+    assert jnp.all(jnp.isfinite(out))
+
+
+def test_moe_aux_losses_positive():
+    from repro.models import moe
+    cfg = _moe_cfg()
+    p = moe.init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 64, cfg.d_model))
+    _, aux = moe.moe_apply(p, x, cfg)
+    assert float(aux["moe_lb_loss"]) > 0.0
+    assert float(aux["moe_z_loss"]) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# Mamba: chunked SSD == sequential recurrence
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([16, 32, 64]), st.sampled_from([8, 16]))
+@settings(max_examples=8, deadline=None)
+def test_ssd_chunked_matches_recurrence(S, chunk):
+    from repro.models.mamba import ssd_chunked
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+    B, h, p, n = 1, 2, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(S), 5)
+    x = jax.random.normal(ks[0], (B, S, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, h))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, n)) * 0.5
+    y, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    ref = ssd_scan_ref(x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1),
+                       A, Bm, Cm).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)

@@ -1,0 +1,122 @@
+"""Property tests (hypothesis) for the pure-python collective schedules —
+the system invariants behind every executable collective."""
+
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedules as sch
+
+sizes = st.integers(min_value=1, max_value=64)
+pow2_sizes = st.sampled_from([1, 2, 4, 8, 16, 32, 64, 128, 256, 512])
+
+
+@given(sizes)
+@settings(max_examples=60, deadline=None)
+def test_dissemination_full_knowledge(n):
+    rounds = sch.dissemination_rounds(n)
+    know = sch.simulate_knowledge(n, rounds)
+    assert all(k == set(range(n)) for k in know), (n, know)
+    # lg N rounds exactly
+    assert len(rounds) == (math.ceil(math.log2(n)) if n > 1 else 0)
+
+
+@given(sizes, st.integers(min_value=0, max_value=63))
+@settings(max_examples=60, deadline=None)
+def test_binomial_reduce_sums_to_root(n, root):
+    root = root % n
+    rounds = sch.binomial_reduce_rounds(n, root)
+    acc = sch.simulate_reduce(n, rounds, values=[float(i + 1) for i in range(n)])
+    assert acc[root] == float(n * (n + 1) / 2), (n, root, acc)
+    # every non-root sends exactly once (tree property)
+    senders = [s for rnd in rounds for (s, _) in rnd]
+    assert sorted(senders) == sorted(set(senders))
+    assert len(senders) == n - 1
+    assert root not in senders
+
+
+@given(sizes, st.integers(min_value=0, max_value=63))
+@settings(max_examples=60, deadline=None)
+def test_binomial_bcast_reaches_all(n, root):
+    root = root % n
+    rounds = sch.binomial_bcast_rounds(n, root)
+    know = sch.simulate_knowledge(n, rounds)
+    assert all(root in k for k in know), (n, root, know)
+    # each rank receives at most once
+    receivers = [d for rnd in rounds for (_, d) in rnd]
+    assert len(receivers) == len(set(receivers)) == n - 1
+
+
+@given(pow2_sizes)
+@settings(max_examples=20, deadline=None)
+def test_recursive_doubling_full_reduction(n):
+    if n == 1:
+        return
+    rounds = sch.recursive_doubling_rounds(n)
+    acc = sch.simulate_reduce(n, rounds, values=[1.0] * n)
+    assert all(a == float(n) for a in acc), (n, acc)
+    know = sch.simulate_knowledge(n, rounds)
+    assert all(k == set(range(n)) for k in know)
+
+
+@given(st.integers(min_value=2, max_value=1024),
+       st.integers(min_value=64, max_value=1 << 24))
+@settings(max_examples=60, deadline=None)
+def test_ring_beats_doubling_for_large_messages(n, nbytes):
+    """Bandwidth-optimality crossover: for big payloads ring's 2(n-1)/n byte
+    term beats recursive doubling's lg(n) full-vector exchanges."""
+    alpha, beta = 1e-6, 1e-10
+    ring = sch.allreduce_cost(n, nbytes, alpha=alpha, beta=beta,
+                              schedule="ring")
+    rd = sch.allreduce_cost(n, nbytes, alpha=alpha, beta=beta,
+                            schedule="recursive_doubling")
+    if n >= 4 and nbytes >= 1 << 22:
+        assert ring < rd, (n, nbytes, ring, rd)
+    if n >= 4 and nbytes <= 256:
+        assert rd < ring, (n, nbytes, ring, rd)
+
+
+@given(st.integers(min_value=2, max_value=64),
+       st.integers(min_value=2, max_value=256),
+       st.integers(min_value=1 << 16, max_value=1 << 28))
+@settings(max_examples=60, deadline=None)
+def test_hierarchical_beats_flat_over_slow_links(n_proc, m_thread, nbytes):
+    """The paper's quantitative claim, generalized: two-level allreduce that
+    keeps the bulk on the fast domain beats a flat schedule that pays slow-
+    link beta on every hop."""
+    fast = dict(alpha_fast=1e-6, beta_fast=1.0 / 50e9)
+    slow = dict(alpha_slow=5e-6, beta_slow=1.0 / 6.25e9)
+    hier = sch.hierarchical_allreduce_cost(n_proc, m_thread, nbytes,
+                                           **fast, **slow)
+    flat = sch.flat_allreduce_cost(n_proc * m_thread, nbytes, **slow)
+    assert hier < flat, (n_proc, m_thread, nbytes, hier, flat)
+
+
+@given(st.integers(min_value=1, max_value=16),
+       st.integers(min_value=1, max_value=64))
+@settings(max_examples=40, deadline=None)
+def test_two_level_plan_slow_fraction(n_proc, m_thread):
+    plan = sch.two_level_allreduce_plan(n_proc, m_thread)
+    assert plan["slow_domain_fraction"] == 1.0 / m_thread
+    phases = [p[0] for p in plan["phases"]]
+    assert phases == ["reduce_scatter", "allreduce", "allgather"]
+
+
+@given(st.integers(min_value=1, max_value=1 << 20))
+@settings(max_examples=80, deadline=None)
+def test_protocol_selection_monotone(nbytes):
+    """Protocol boundaries are monotone in message size and match the
+    paper's thresholds (4096 interthread, 16384 interprocess)."""
+    from repro.core import protocol as pr
+    p = pr.select_protocol(nbytes, interthread=True)
+    if nbytes <= 4096:
+        assert p in ("eager_fast", "eager")
+    else:
+        assert p == "one_copy"
+    q = pr.select_protocol(nbytes, interthread=False)
+    assert q == ("eager" if nbytes <= 16384 else "rndv")
+    # latency model is monotone nondecreasing in size within a protocol
+    lat1 = pr.interthread_latency(nbytes)
+    lat2 = pr.interthread_latency(nbytes + 1024)
+    if pr.select_protocol(nbytes) == pr.select_protocol(nbytes + 1024):
+        assert lat2 >= lat1

@@ -1,0 +1,197 @@
+"""Substrate tests: optimizer, data pipeline, checkpoint, serving engine,
+single-device trainer; multi-device grad-sync parity runs via mp_cases."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig, ServeConfig, MeshConfig
+from repro.configs import get_smoke_config
+from repro.data import SyntheticPipeline
+from repro.models.registry import build_model, make_synthetic_batch
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.train import checkpoint as ckpt
+from repro.train.trainer import TrainState, init_train_state, make_train_step
+from repro.serve import Engine
+from tests.helpers import run_case
+
+TRAIN = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                    loss_chunk=16, attn_chunk_threshold=64, attn_chunk=16,
+                    remat=False, learning_rate=1e-2, warmup_steps=2,
+                    total_steps=50)
+MESH1 = MeshConfig(shape=(1,), axis_names=("data",))
+
+
+def _model(arch="yi-9b"):
+    cfg = get_smoke_config(arch)
+    return cfg, build_model(cfg, TRAIN, ServeConfig(), tp=1)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    state = adamw_init(params)
+    loss = lambda p: jnp.sum(jnp.square(p["w"]))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, m = adamw_update(g, state, params, lr=0.05,
+                                        weight_decay=0.0)
+    assert loss(params) < 1e-3
+    assert int(state.step) == 200
+    assert jnp.isfinite(m["grad_norm"])
+
+
+def test_adamw_grad_clip_and_master():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = adamw_init(params)
+    assert state.master is not None            # bf16 params need fp32 master
+    g = {"w": jnp.full((4,), 1e6, jnp.bfloat16)}
+    new_p, new_s, m = adamw_update(g, state, params, lr=0.1, grad_clip=1.0)
+    assert float(m["grad_norm"]) > 1e5
+    # clipped step is bounded: |dw| <= lr * (1 + wd) approx
+    dw = np.abs(np.asarray(new_s.master["w"]) - 1.0)
+    assert np.all(dw < 0.3)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, 10, 100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert float(lr(100)) == pytest.approx(0.1, rel=1e-3)
+    assert float(lr(55)) > float(lr(90))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic_and_shardable():
+    cfg = get_smoke_config("yi-9b")
+    pipe = SyntheticPipeline(cfg, batch=8, seq_len=16, seed=7)
+    b1, b2 = pipe.get_batch(3), pipe.get_batch(3)
+    assert np.array_equal(b1["tokens"], b2["tokens"])       # deterministic
+    b3 = pipe.get_batch(4)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])   # varies by step
+    # shard slices tile the global batch exactly
+    parts = [pipe.shard_slice(3, s, 4)["tokens"] for s in range(4)]
+    assert np.array_equal(np.concatenate(parts), b1["tokens"])
+    # labels are next-token shifted
+    full = pipe._tokens(pipe._rng(3), 8, 17)
+    assert np.array_equal(b1["labels"], full[:, 1:])
+    # resumable state round-trip
+    st = pipe.state_dict(3)
+    pipe2 = SyntheticPipeline.from_state(cfg, 8, 16, st)
+    assert np.array_equal(pipe2.get_batch(3)["tokens"], b1["tokens"])
+
+
+def test_pipeline_tokens_in_vocab():
+    for arch in ("whisper-tiny", "internvl2-76b", "mamba2-370m"):
+        cfg = get_smoke_config(arch)
+        pipe = SyntheticPipeline(cfg, batch=2, seq_len=16)
+        b = pipe.get_batch(0)
+        assert b["tokens"].min() >= 0
+        assert b["tokens"].max() < cfg.vocab_size
+        for k in ("frames", "patch_embeds"):
+            if k in b:
+                assert np.isfinite(b[k]).all()
+
+
+# ---------------------------------------------------------------------------
+# trainer (single device)
+# ---------------------------------------------------------------------------
+
+def test_train_loss_decreases():
+    cfg, model = _model()
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, MESH1, TRAIN))
+    pipe = SyntheticPipeline(cfg, batch=4, seq_len=32, seed=0)
+    losses = []
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in pipe.get_batch(i).items()}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[:3] + losses[-3:]
+    assert np.isfinite(losses).all()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_keep_k(tmp_path):
+    cfg, model = _model()
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    d = str(tmp_path / "ckpt")
+    for s in (1, 2, 3, 4):
+        ckpt.save(d, s, state, extra={"data_step": s * 10}, keep=2)
+    assert ckpt.latest_step(d) == 4
+    steps = sorted(os.listdir(d))
+    assert steps == ["step_00000003", "step_00000004"]      # keep-k pruning
+    restored, step, extra = ckpt.restore(d, state)
+    assert step == 4 and extra == {"data_step": 40}
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        state, restored)
+
+
+def test_checkpoint_async_and_atomic(tmp_path):
+    cfg, model = _model()
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    d = str(tmp_path / "ckpt")
+    t = ckpt.save(d, 7, state, async_save=True)
+    t.join()
+    assert ckpt.latest_step(d) == 7
+    assert not any(x.endswith(".tmp") for x in os.listdir(d))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path / "ckpt")
+    ckpt.save(d, 1, {"w": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        ckpt.restore(d, {"w": jnp.zeros((5,))})
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+def test_engine_generates():
+    cfg, model = _model("gemma-2b")
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, cache_len=48)
+    batch = make_synthetic_batch(cfg, 2, 8, compute_dtype="float32")
+    out = eng.generate({"tokens": batch["tokens"]}, max_new_tokens=6)
+    assert out.shape == (2, 6)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+    # greedy decode is deterministic
+    out2 = eng.generate({"tokens": batch["tokens"]}, max_new_tokens=6)
+    assert np.array_equal(out, out2)
+
+
+def test_engine_temperature_sampling():
+    cfg, model = _model("mamba2-370m")
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, cache_len=32)
+    batch = make_synthetic_batch(cfg, 2, 8, compute_dtype="float32")
+    out = eng.generate({"tokens": batch["tokens"]}, max_new_tokens=5,
+                       temperature=1.0, seed=3)
+    assert out.shape == (2, 5)
+
+
+# ---------------------------------------------------------------------------
+# multi-device (subprocess)
+# ---------------------------------------------------------------------------
+
+def test_grad_sync_modes_agree():
+    run_case("grad_sync_parity", ndev=8, timeout=600)
+
+
+def test_elastic_checkpoint_remesh():
+    run_case("elastic_remesh", ndev=8, timeout=600)

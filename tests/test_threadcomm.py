@@ -1,0 +1,22 @@
+"""ThreadComm lifecycle + collective correctness (multi-device cases run in
+subprocesses; host-side rank arithmetic tested inline)."""
+
+import pytest
+
+from tests.helpers import run_case
+
+
+def test_collectives_flat():
+    run_case("collectives_flat", ndev=8)
+
+
+def test_threadcomm_unified():
+    run_case("threadcomm_unified", ndev=8)
+
+
+def test_p2p_protocols():
+    run_case("p2p_protocols", ndev=8)
+
+
+def test_hierarchical_collective_bytes():
+    run_case("hierarchical_collective_bytes", ndev=8)

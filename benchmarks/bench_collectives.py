@@ -1,10 +1,13 @@
 """Beyond-paper: hierarchical (threadcomm) vs flat gradient sync on the
 production multi-pod mesh — the paper's §4.2 insight generalized to the
-pod/DCN hierarchy.
+pod/DCN hierarchy — now exercised through the unified ``Comm`` API
+(sub-comm compositions + stream-ordered nonblocking pipeline).
 
-Reports the alpha-beta model at production scale (2 pods × 256 chips) and
+Reports the alpha-beta model at production scale (2 pods × 256 chips),
 the measured HLO slow-axis bytes ratio from the dry-run artifacts when the
-grad-sync variants have been lowered (launch/dryrun.py --grad-sync)."""
+grad-sync variants have been lowered (launch/dryrun.py --grad-sync), and
+(without --fast) verified wall times of every Comm allreduce composition
+from a multi-device subprocess."""
 
 from __future__ import annotations
 
@@ -12,7 +15,7 @@ import glob
 import json
 import os
 
-from benchmarks.common import ROOT, Row
+from benchmarks.common import ROOT, Row, run_mp_case
 from repro.core.schedules import (flat_allreduce_cost,
                                   hierarchical_allreduce_cost)
 
@@ -53,4 +56,9 @@ def artifact_rows():
 
 
 def rows(fast: bool = False):
-    return model_rows() + artifact_rows()
+    out = model_rows() + artifact_rows()
+    if not fast:
+        # Comm-API schedule comparison: flat vs hierarchical (sub-comm
+        # composed) vs hierarchical_tree vs the iallreduce stream pipeline
+        out += run_mp_case("comm_schedules", ndev=8)
+    return out

@@ -31,6 +31,13 @@ def rows(fast: bool = False):
         out.append((f"p2p_model_interprocess_{nbytes}B", t_proc * 1e6,
                     f"proto={protocol.select_protocol(nbytes, False)};"
                     f"bw={bw_p:.2f}GB/s"))
+    # request-object overhead of the nonblocking API (Comm.isend): the
+    # eager fast path skips request allocation entirely (paper §3.2)
+    for nbytes in (64, 4096, 65536):
+        ovh = protocol.request_overhead(nbytes)
+        out.append((f"p2p_request_overhead_{nbytes}B", ovh * 1e6,
+                    f"proto={protocol.select_protocol(nbytes)};"
+                    f"skipped={ovh == 0.0}"))
     # kernel byte accounting (the mechanism behind the bandwidth gap)
     for nbytes in (4096, 1 << 20):
         e = copy_accounting(nbytes, "eager")

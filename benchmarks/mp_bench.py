@@ -19,11 +19,11 @@ from functools import partial
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import time_fn
+from repro.core.compat import make_mesh, shard_map
 
 
 def _mesh(n):
-    return jax.make_mesh((n,), ("ranks",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((n,), ("ranks",))
 
 
 def case_barrier():
@@ -33,7 +33,7 @@ def case_barrier():
     mesh = _mesh(n)
     tok = jnp.arange(float(n))
     for mode in ("msg", "atomic"):
-        fn = jax.jit(jax.shard_map(
+        fn = jax.jit(shard_map(
             lambda v: coll.barrier(v[0], "ranks", mode=mode)[None],
             mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks")))
         us = time_fn(fn, tok, iters=20)
@@ -53,7 +53,7 @@ def case_reduce():
                                           schedule="binomial")
             else:
                 f = lambda v: coll.reduce(v, "ranks", schedule="psum")
-            fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("ranks"),
+            fn = jax.jit(shard_map(f, mesh=mesh, in_specs=P("ranks"),
                                        out_specs=P("ranks")))
             us = time_fn(fn, x, iters=10)
             print(f"ROW,reduce_{sched}_{nelem * 4}B_n{n},{us:.3f},host-wall")
@@ -65,18 +65,17 @@ def case_allreduce_schedules():
     from repro.core import collectives as coll
     n = jax.device_count()
     mesh = _mesh(n)
-    hmesh = jax.make_mesh((2, n // 2), ("proc", "thread"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    hmesh = make_mesh((2, n // 2), ("proc", "thread"))
     for nelem in (1024, 1 << 16):
         x = jnp.arange(float(n * nelem)).reshape(n, nelem)
         for sched in ("psum", "ring", "recursive_doubling"):
-            fn = jax.jit(jax.shard_map(
+            fn = jax.jit(shard_map(
                 lambda v, s=sched: coll.allreduce(v, "ranks", schedule=s),
                 mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks")))
             us = time_fn(fn, x, iters=10)
             print(f"ROW,allreduce_{sched}_{nelem * 4}B_n{n},{us:.3f},host-wall")
         xh = x.reshape(2, n // 2, nelem)
-        fnh = jax.jit(jax.shard_map(
+        fnh = jax.jit(shard_map(
             lambda v: coll.hierarchical_allreduce(
                 v, process_axes=("proc",), thread_axes=("thread",)),
             mesh=hmesh, in_specs=P(("proc", "thread")),
@@ -101,7 +100,7 @@ def case_spmv():
             continue
         mesh = _mesh(n_ranks)
         mm = make_distributed_matmult("ranks", n_ranks)
-        fn = jax.jit(jax.shard_map(mm, mesh=mesh, in_specs=P("ranks"),
+        fn = jax.jit(shard_map(mm, mesh=mesh, in_specs=P("ranks"),
                                    out_specs=P("ranks")))
         # correctness vs oracle, then timing
         y = fn(x)
@@ -111,6 +110,49 @@ def case_spmv():
         us = time_fn(fn, x, iters=5)
         print(f"ROW,spmv_matmult_ranks{n_ranks}_{n_cube}cube,{us:.3f},"
               f"host-wall;verified")
+
+
+def case_comm_schedules():
+    """Unified Comm API: hierarchical allreduce as a sub-comm composition
+    (reduce_scatter/allreduce/allgather and reduce/allreduce/bcast) vs the
+    flat root-comm allreduce, plus the stream-ordered nonblocking
+    pipeline — wall time AND numerics parity on every variant."""
+    from repro.core.comm import threadcomm_init
+    n = jax.device_count()
+    mesh = make_mesh((2, n // 2), ("proc", "thread"))
+    comm = threadcomm_init(mesh, process_axes=("proc",),
+                           thread_axes=("thread",))
+    comm.start()
+    tcomm, pcomm = comm.thread_comm(), comm.process_comm()
+    for nelem in (1024, 1 << 16):
+        x = jnp.arange(float(n * nelem)).reshape(n, nelem)
+        want = np.tile(np.asarray(x).sum(0), (n, 1))
+
+        def bench(tag, fn):
+            jf = jax.jit(shard_map(
+                fn, mesh=mesh, in_specs=P(("proc", "thread")),
+                out_specs=P(("proc", "thread")), check_vma=False))
+            got = np.asarray(jf(x)).reshape(n, nelem)
+            np.testing.assert_allclose(got, want, rtol=1e-5)
+            us = time_fn(jf, x, iters=10)
+            print(f"ROW,comm_{tag}_{nelem * 4}B_n{n},{us:.3f},"
+                  f"host-wall;verified")
+
+        bench("flat", lambda v: comm.allreduce(v))
+        bench("hier", lambda v: comm.allreduce(v, schedule="hierarchical"))
+        bench("hier_tree",
+              lambda v: comm.allreduce(v, schedule="hierarchical_tree"))
+
+        def stream_pipeline(v):
+            flat = v.reshape(-1)
+            with comm.stream("bench"):
+                r1 = tcomm.ireduce_scatter(flat)
+                r2 = pcomm.iallreduce(r1.wait())
+                out = tcomm.iallgather(r2.wait()).wait()
+            return out.reshape(v.shape)
+        bench("istream_hier", stream_pipeline)
+    comm.finish()
+    comm.free()
 
 
 def case_p2p_wall():
@@ -123,7 +165,7 @@ def case_p2p_wall():
         nelem = max(1, nbytes // 4)
         x = jnp.arange(float(n * nelem)).reshape(n, nelem)
         for proto in ("eager", "one_copy"):
-            fn = jax.jit(jax.shard_map(
+            fn = jax.jit(shard_map(
                 lambda v, p=proto: p2p.send_recv(v, "ranks", pairs,
                                                  force_protocol=p)[0],
                 mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks")))

@@ -2,13 +2,23 @@
 
 Prints ``name,us_per_call,derived`` CSV (plus section comments). Pass
 ``--fast`` to skip the multi-device subprocess measurements (models and
-artifact-derived rows only)."""
+artifact-derived rows only); pass ``--json PATH`` to also emit the rows as
+a machine-readable artifact (e.g. ``BENCH_collectives.json``) so the perf
+trajectory accumulates across commits (the CI workflow uploads it)."""
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
 import sys
 import traceback
+
+# runnable both as `python -m benchmarks.run` and `python benchmarks/run.py`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 
 def main() -> None:
@@ -18,6 +28,9 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single bench module (p2p|barrier|reduce|"
                          "spmv|collectives)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (e.g. "
+                         "BENCH_collectives.json)")
     args = ap.parse_args()
 
     from benchmarks import (bench_barrier, bench_collectives, bench_p2p,
@@ -28,21 +41,42 @@ def main() -> None:
         "reduce": (bench_reduce, "paper Fig.5: reduce latency"),
         "spmv": (bench_spmv, "paper Fig.6: PETSc MatMult (27pt stencil)"),
         "collectives": (bench_collectives,
-                        "beyond-paper: hierarchical vs flat grad sync"),
+                        "beyond-paper: hierarchical vs flat grad sync, "
+                        "Comm-API schedules"),
     }
     if args.only:
         modules = {args.only: modules[args.only]}
 
     print("name,us_per_call,derived")
     failures = 0
+    sections = {}
     for key, (mod, desc) in modules.items():
         print(f"# --- {key}: {desc} ---")
         try:
-            for name, us, derived in mod.rows(fast=args.fast):
-                print(f"{name},{us:.3f},{derived}")
+            rows = list(mod.rows(fast=args.fast))
         except Exception:
             failures += 1
             traceback.print_exc()
+            continue
+        sections[key] = [
+            {"name": name, "us_per_call": us, "derived": derived}
+            for name, us, derived in rows]
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived}")
+
+    if args.json:
+        payload = {
+            "schema": "repro-bench-v1",
+            "fast": args.fast,
+            "platform": {"python": platform.python_version(),
+                         "machine": platform.machine()},
+            "sections": sections,
+            "failures": failures,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {args.json} "
+              f"({sum(len(v) for v in sections.values())} rows)")
     if failures:
         sys.exit(1)
 

@@ -1,9 +1,11 @@
-"""Collectives over a threadcomm: the paper's §4.2 comparisons, executable.
+"""Collectives through the unified ``Comm`` API: the paper's §4.2
+comparisons plus the split/dup + nonblocking surface this repo adds.
 
-Shows: dissemination barrier (pt2pt) vs fused-atomic barrier, binomial
-MPI_Reduce, binomial bcast, ring / recursive-doubling / hierarchical
-allreduce — all over the unified N×M rank space, all verified against the
-fused result.
+Shows: derived sub-communicators (split by color, dup), collectives as
+comm METHODS (dissemination vs atomic barrier, binomial reduce/bcast, ring
+/ recursive-doubling allreduce), the hierarchical allreduce as an explicit
+sub-comm composition (thread.reduce -> process.allreduce -> thread.bcast),
+and request-based nonblocking overlap on a CommStream.
 
 Run:  PYTHONPATH=src python examples/collectives_demo.py
 """
@@ -11,51 +13,79 @@ Run:  PYTHONPATH=src python examples/collectives_demo.py
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import time
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import collectives as coll
 from repro.core import threadcomm_init
+from repro.core.compat import make_mesh
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("proc", "thread"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    tc = threadcomm_init(mesh, process_axes=("proc",),
-                         thread_axes=("thread",))
-    n = tc.size
+    mesh = make_mesh((2, 4), ("proc", "thread"))
+    root = threadcomm_init(mesh, process_axes=("proc",),
+                           thread_axes=("thread",))
+    n = root.size
     x = jnp.arange(float(n)) + 1.0
 
-    with tc.start():
-        print(f"== threadcomm: {tc.num_processes} processes x "
-              f"{tc.threads_per_process} threads = {n} ranks ==")
+    with root.start():
+        print(f"== comm: {root.num_processes} processes x "
+              f"{root.threads_per_process} threads = {n} unified ranks ==")
 
+        # ---- collectives are methods on the comm ----
         for mode in ("msg", "atomic"):
-            tok = tc.run(lambda v, m=mode: tc.barrier(v[0], mode=m)[None], x)
+            tok = root.run(lambda v, m=mode: root.barrier(v[0], mode=m)[None],
+                           x)
             print(f"barrier[{mode:6s}]  -> token {np.asarray(tok)[0]:.0f} "
                   f"(max over ranks = {n})")
 
-        r = tc.run(lambda v: tc.reduce(v, root=0, schedule='binomial'), x)
+        r = root.run(lambda v: root.reduce(v, root=0, schedule='binomial'), x)
         print(f"reduce(binomial) -> root holds {np.asarray(r)[0]:.0f} "
               f"(sum = {n * (n + 1) // 2})")
 
-        b = tc.run(lambda v: tc.bcast(v, root=5), x)
+        b = root.run(lambda v: root.bcast(v, root=5), x)
         print(f"bcast(root=5)    -> all ranks hold "
               f"{set(np.asarray(b).tolist())}")
 
-        for sched in ("psum", "ring", "recursive_doubling", "hierarchical"):
-            out = tc.run(lambda v, s=sched: tc.allreduce(v, schedule=s), x)
+        for sched in ("psum", "ring", "recursive_doubling",
+                      "hierarchical", "hierarchical_tree"):
+            out = root.run(lambda v, s=sched: root.allreduce(v, schedule=s), x)
             ok = np.allclose(np.asarray(out), n * (n + 1) / 2)
             print(f"allreduce[{sched:18s}] -> {'OK' if ok else 'MISMATCH'}")
 
-        # the paper's global-barrier point: ONE call spans both levels
-        # (MPI+Threads needs omp-barrier + MPI_Barrier + omp-barrier)
-        tok = tc.run(lambda v: tc.barrier(v[0], mode="msg")[None], x)
+        # ---- derived sub-comms are load-bearing ----
+        # split by process color: per-process thread comms (fast domain)
+        tcomm = root.split([rr // 4 for rr in range(n)])
+        pcomm = root.process_comm()
+        per_proc = root.run(lambda v: tcomm.allreduce(v), x)
+        print("split(thread).allreduce -> per-process sums",
+              sorted(set(np.asarray(per_proc).tolist())))
+        # the hierarchical schedule, spelled out as the composition
+        comp = root.run(
+            lambda v: tcomm.bcast(pcomm.allreduce(
+                tcomm.reduce(v, root=0)), root=0), x)
+        print("thread.reduce -> process.allreduce -> thread.bcast:",
+              float(np.asarray(comp)[0]), f"(= flat {n * (n + 1) // 2})")
+        # a non-grid split still works (generic merged-ring path)
+        parity = root.split([rr % 2 for rr in range(n)])
+        pp = root.run(lambda v: parity.allreduce(v), x)
+        print("split(parity).allreduce ->",
+              sorted(set(np.asarray(pp).tolist())), "(odd/even rank sums)")
+
+        # ---- nonblocking requests on a stream ----
+        def overlapped(v):
+            with root.stream("s0"):
+                r1 = tcomm.iallreduce(v)       # fast domain, in flight
+                r2 = pcomm.iallreduce(r1.wait())   # slow domain, ordered
+            return r2.wait()
+        nb = root.run(overlapped, x)
+        print("stream-ordered iallreduce pipeline ->",
+              float(np.asarray(nb)[0]), f"(= flat {n * (n + 1) // 2})")
+
+        # one unified barrier spans processes AND threads (the paper's
+        # point: MPI+Threads needs omp-barrier + MPI_Barrier + omp-barrier)
+        root.run(lambda v: root.barrier(v[0], mode="msg")[None], x)
         print("single unified barrier across processes AND threads: OK")
-    tc.free()
+    root.free()
 
 
 if __name__ == "__main__":

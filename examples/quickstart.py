@@ -1,8 +1,12 @@
-"""Quickstart: the paper's Listing 1/2 in JAX.
+"""Quickstart: the unified ``Comm`` API in 40 lines.
 
-The paper launches 2 MPI processes × 4 OpenMP threads and lets every thread
-print its unified threadcomm rank (Rank i / 8). Here: 2 "process" mesh rows
-× 4 "thread" mesh columns of host devices.
+The paper fuses 2 MPI processes × 4 OpenMP threads into one communicator of
+8 unified ranks. Here the "processes" are 2 mesh rows and the "threads" 4
+mesh columns of host devices — and the modern surface is one ``Comm``
+object you derive sub-communicators from and issue nonblocking requests on:
+
+    root.split / root.dup / root.thread_comm / root.process_comm
+    req = comm.iallreduce(x);  ... overlap ...  ;  req.wait()
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,38 +14,58 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import threadcomm_init
+from repro.core.compat import make_mesh
 
 NT = 4  # threads per process (paper's #define NT 4)
 
 
 def main():
-    mesh = jax.make_mesh((2, NT), ("proc", "thread"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, NT), ("proc", "thread"))
 
     # MPIX_Threadcomm_init(MPI_COMM_WORLD, NT, &threadcomm)
-    tc = threadcomm_init(mesh, process_axes=("proc",),
-                         thread_axes=("thread",), num_threads=NT)
+    root = threadcomm_init(mesh, process_axes=("proc",),
+                           thread_axes=("thread",), num_threads=NT)
 
-    with tc.start():                       # MPIX_Threadcomm_start
-        ranks = tc.run(
-            lambda x: x + tc.device_rank().astype(jnp.float32),
-            jnp.zeros(tc.size))
+    with root.start():                     # MPIX_Threadcomm_start
+        ranks = root.run(
+            lambda x: x + root.device_rank().astype(jnp.float32),
+            jnp.zeros(root.size))
         for r in np.asarray(ranks, dtype=int):
-            print(f" Rank {r} / {tc.size}")
+            print(f" Rank {r} / {root.size}")
 
-        # MPI operations over the threadcomm: a unified allreduce
-        total = tc.run(lambda v: tc.allreduce(v, schedule="psum"),
-                       jnp.arange(float(tc.size)))
-        print(f" Allreduce over {tc.size} unified ranks:",
+        # derive sub-communicators: the fast (intra-process) domain via
+        # split — color = process index — and the slow domain for free
+        tcomm = root.split([r // NT for r in range(root.size)])
+        pcomm = root.process_comm()
+        print(f" split -> {tcomm.size}-rank thread comms "
+              f"x{len(tcomm.families())}, {pcomm.size}-rank process comms")
+        print(f" rank 2 of process-1's thread comm is unified rank "
+              f"{tcomm.translate(2, family=1)}")
+
+        # nonblocking allreduce: a Request you overlap compute with
+        def overlapped(v):
+            with root.stream("grad"):
+                req = root.iallreduce(v)   # issued on the "grad" stream
+            local = v * 2.0                # overlaps the collective
+            return req.wait() + 0.0 * local
+        total = root.run(overlapped, jnp.arange(float(root.size)))
+        print(f" iallreduce over {root.size} unified ranks:",
               float(np.asarray(total)[0]), "(expected",
-              sum(range(tc.size)), ")")
-    # MPIX_Threadcomm_finish at context exit
-    tc.free()                              # MPIX_Threadcomm_free
+              sum(range(root.size)), ")")
+
+        # the two-level hierarchical schedule IS a sub-comm composition:
+        # thread.reduce_scatter -> process.allreduce -> thread.allgather
+        h = root.run(lambda v: root.allreduce(v, schedule="hierarchical"),
+                     jnp.arange(float(root.size)))
+        print(" hierarchical (sub-comm composed) allreduce:",
+              float(np.asarray(h)[0]))
+    # MPIX_Threadcomm_finish at context exit — every derived comm/request
+    # above is now invalid (activation-window rule, paper §2)
+    root.free()                            # MPIX_Threadcomm_free
     print("done.")
 
 

@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 from repro.apps.spmv import (cg_solve_ref, make_distributed_matmult,
                              stencil_matmult_ref)
 from repro.core import threadcomm_init
+from repro.core.compat import make_mesh, shard_map
 
 
 def main():
@@ -34,8 +35,7 @@ def main():
     args = ap.parse_args()
     n = args.n
 
-    mesh = jax.make_mesh((2, 4), ("proc", "thread"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("proc", "thread"))
     tc = threadcomm_init(mesh, process_axes=("proc",),
                          thread_axes=("thread",))
     axes = tc.unified_axes
@@ -71,7 +71,7 @@ def main():
                                            length=args.iters)
             return x, hist
 
-        run = jax.jit(jax.shard_map(cg, mesh=mesh,
+        run = jax.jit(shard_map(cg, mesh=mesh,
                                     in_specs=P(axes),
                                     out_specs=(P(axes), P()),
                                     check_vma=False))
@@ -89,7 +89,7 @@ def main():
         print(f"max |x - x_ref| = {err:.3e}",
               "(OK)" if err < 1e-3 else "(MISMATCH)")
 
-        y = jax.jit(jax.shard_map(matmult, mesh=mesh, in_specs=P(axes),
+        y = jax.jit(shard_map(matmult, mesh=mesh, in_specs=P(axes),
                                   out_specs=P(axes)))(b)
         err_mm = float(jnp.max(jnp.abs(y - stencil_matmult_ref(b))))
         print(f"MatMult max err vs oracle = {err_mm:.3e}",

@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding
 
 from repro.config import MeshConfig, ModelConfig, TrainConfig, ServeConfig
 from repro.data import SyntheticPipeline
+from repro.core.compat import make_mesh
 from repro.dist.sharding import batch_pspec
 from repro.models.registry import build_model
 from repro.train import checkpoint as ckpt
@@ -63,8 +64,7 @@ def main():
     mesh_cfg = MeshConfig(shape=(2, 2, 2),
                           axis_names=("pod", "data", "model"),
                           process_axes=("pod",))
-    mesh = jax.make_mesh(mesh_cfg.shape, mesh_cfg.axis_names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh(mesh_cfg.shape, mesh_cfg.axis_names)
     tcfg = TrainConfig(param_dtype="float32", compute_dtype="float32",
                        learning_rate=3e-3, warmup_steps=20,
                        total_steps=max(args.steps, 100), grad_sync=args.grad_sync,

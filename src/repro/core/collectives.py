@@ -1,8 +1,11 @@
 """Executable collectives over a unified rank space, built from
 ``lax.ppermute`` + the schedules in :mod:`repro.core.schedules`.
 
-All functions are designed to be called INSIDE ``jax.shard_map`` (or
-``ThreadComm.run``). ``axes`` may be a single mesh-axis name or a tuple —
+This is the schedule/lowering layer: user code goes through the ``Comm``
+methods in :mod:`repro.core.comm` (the unified communicator API), which
+delegate here. All functions are designed to be called INSIDE
+``jax.shard_map`` (or ``ThreadComm.run``). ``axes`` may be a single
+mesh-axis name or a tuple —
 a tuple spans the flattened (process-major) unified rank space, exactly the
 threadcomm construction.
 
@@ -102,7 +105,31 @@ def bcast(x, axes: Axes, root: int = 0):
 # Allreduce
 # ---------------------------------------------------------------------------
 
-def allreduce(x, axes: Axes, schedule: str = "psum"):
+def allreduce(x, axes: Axes, schedule: str = "psum", wire_dtype=None):
+    """``wire_dtype`` compresses the on-wire representation (e.g. bfloat16
+    halves the bytes of an f32 gradient reduce) while accumulating in the
+    input dtype. Implemented on the pt2pt recursive-doubling schedule —
+    the paper's point-to-point collective — which also dodges an XLA bug
+    in low-precision reduce computations under manual axes."""
+    if wire_dtype is not None:
+        wire = jnp.dtype(wire_dtype)
+        n = int(axis_size(axes))
+        if n <= 1:
+            return x
+        if n & (n - 1) == 0:
+            for rnd in sch.recursive_doubling_rounds(n):
+                recv = lax.ppermute(x.astype(wire), axes, rnd)
+                x = x + recv.astype(x.dtype)
+            return x
+        # non-power-of-two: ring accumulate (n-1 rounds). Wire casts per
+        # hop, accumulation stays in the input dtype — never a fused psum
+        # in the wire dtype.
+        ring = sch.ring_rounds(n)[0]
+        carry = x
+        for _ in range(n - 1):
+            carry = lax.ppermute(carry.astype(wire), axes, ring).astype(x.dtype)
+            x = x + carry
+        return x
     if schedule == "psum":
         return lax.psum(x, axes)
     if schedule == "recursive_doubling":

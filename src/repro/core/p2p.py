@@ -11,6 +11,10 @@ wire both lower to collective-permute, but the eager path pads tiny messages
 into fixed cells (aggregation-friendly, modeled in protocol.py) while the
 1-copy path moves the buffer directly. ``kernels/msgq`` implements the
 intra-device staging mechanics as a Pallas kernel.
+
+This is the mechanism layer: user code addresses messages through
+``Comm.send_recv`` / ``Comm.isend`` (:mod:`repro.core.comm`), which
+translate comm-local ranks and attach the request/stream semantics.
 """
 
 from __future__ import annotations

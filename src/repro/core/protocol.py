@@ -80,6 +80,16 @@ def select_protocol(nbytes: int, interthread: bool = True,
     return "eager" if nbytes <= EAGER_THRESHOLD_INTERPROCESS else "rndv"
 
 
+def request_overhead(nbytes: int, proto: str = None,
+                     m: HostModel = HostModel()) -> float:
+    """Request-object cost (seconds) of a nonblocking op under the paper's
+    protocol: the eager fast path for single-cell messages SKIPS request
+    allocation entirely (§3.2) — the small-message latency win that
+    ``Comm.isend`` surfaces on its returned ``Request``."""
+    proto = proto or select_protocol(nbytes)
+    return 0.0 if proto == "eager_fast" else m.t_request
+
+
 def bandwidth(nbytes: int, latency_s: float) -> float:
     return nbytes / latency_s
 

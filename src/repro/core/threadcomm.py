@@ -1,244 +1,23 @@
-"""MPIX Threadcomm, adapted to JAX: a unified N×M rank space over a
-hierarchical device mesh.
+"""MPIX Threadcomm, adapted to JAX — back-compat facade.
 
-The paper (§2) fuses an N-process MPI world with M-thread OpenMP regions
-into one communicator of N×M ranks with process-major ordering. Here the
-"processes" are the slow-domain mesh axes (inter-pod) and the "threads" are
-the fast-domain axes (intra-pod chips): ``rank = proc_index * M + thread_index``.
+The communicator implementation now lives in :mod:`repro.core.comm`, where
+the root :class:`~repro.core.comm.ThreadComm` is one instance of the
+unified ``Comm`` interface (split/dup sub-communicators, request-based
+nonblocking ops, stream-bound contexts). This module keeps the original
+import surface::
 
-Lifecycle mirrors the MPIX API and is enforced:
+    from repro.core.threadcomm import ThreadComm, threadcomm_init
+
+Lifecycle (unchanged, paper §2):
 
     tc = threadcomm_init(mesh, process_axes, thread_axes)   # heavy, collective
     with tc.start():                                        # light, activates
         tc.allreduce(...)  /  tc.run(fn, ...)               # unified-rank comm
     # finish() implicit at context exit — derived objects invalidated
     tc.free()                                               # releases the comm
-
-``init`` builds the rank table (the paper's heavy allreduce-on-thread-counts
-step becomes a host-side enumeration of mesh coordinates). ``start`` is the
-cheap per-region activation. Derived objects (groups) carry the activation
-epoch and refuse to operate across ``finish`` — the paper's "threadcomm-
-derived objects live within the activation window" rule.
 """
 
-from __future__ import annotations
-
-import contextlib
-import math
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Callable, Optional, Sequence, Tuple
-
-import jax
-import numpy as np
-from jax import lax
-from jax.sharding import PartitionSpec as P
-
-from repro.core import collectives as coll
-
-
-class ThreadCommError(RuntimeError):
-    pass
-
-
-@dataclass
-class Group:
-    """A subset of unified ranks derived from an active threadcomm.
-    Valid only within the activation window that created it (paper §2)."""
-    comm: "ThreadComm"
-    ranks: Tuple[int, ...]
-    _epoch: int = 0
-
-    def _check(self):
-        self.comm._check_active()
-        if self._epoch != self.comm._epoch:
-            raise ThreadCommError(
-                "group outlived its threadcomm activation window "
-                "(derived objects die at MPIX_Threadcomm_finish)")
-
-    @property
-    def size(self) -> int:
-        self._check()
-        return len(self.ranks)
-
-    def translate(self, rank: int) -> int:
-        self._check()
-        return self.ranks[rank]
-
-
-class ThreadComm:
-    """Unified communicator over ``process_axes`` × ``thread_axes``."""
-
-    def __init__(self, mesh: jax.sharding.Mesh,
-                 process_axes: Sequence[str],
-                 thread_axes: Sequence[str]):
-        names = mesh.axis_names
-        for ax in (*process_axes, *thread_axes):
-            if ax not in names:
-                raise ThreadCommError(f"axis {ax!r} not in mesh {names}")
-        if set(process_axes) & set(thread_axes):
-            raise ThreadCommError("process and thread axes must be disjoint")
-        self.mesh = mesh
-        self.process_axes = tuple(process_axes)
-        self.thread_axes = tuple(thread_axes)
-        self._active = False
-        self._freed = False
-        self._epoch = 0
-        self._attrs = {}
-        # --- rank table (the 'heavy' init step) ---
-        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        self.num_processes = math.prod(sizes[a] for a in self.process_axes) \
-            if self.process_axes else 1
-        self.threads_per_process = math.prod(
-            sizes[a] for a in self.thread_axes) if self.thread_axes else 1
-        self.size = self.num_processes * self.threads_per_process
-        self._axis_sizes = sizes
-
-    # ------------------------------------------------------------------
-    # lifecycle
-    # ------------------------------------------------------------------
-    def _check_not_freed(self):
-        if self._freed:
-            raise ThreadCommError("threadcomm already freed")
-
-    def _check_active(self):
-        self._check_not_freed()
-        if not self._active:
-            raise ThreadCommError(
-                "threadcomm is inactive: call start() (MPIX_Threadcomm_start)"
-                " before communicating")
-
-    @contextlib.contextmanager
-    def start(self):
-        """Activate the communicator (MPIX_Threadcomm_start/finish pair)."""
-        self._check_not_freed()
-        if self._active:
-            raise ThreadCommError("threadcomm already active (nested start)")
-        self._active = True
-        try:
-            yield self
-        finally:
-            self._active = False
-            self._attrs.clear()   # attribute lifetime = activation window
-            self._epoch += 1
-
-    def free(self):
-        self._check_not_freed()
-        if self._active:
-            raise ThreadCommError("cannot free an active threadcomm "
-                                  "(call finish first)")
-        self._freed = True
-
-    # ------------------------------------------------------------------
-    # rank arithmetic (host side)
-    # ------------------------------------------------------------------
-    @property
-    def unified_axes(self) -> Tuple[str, ...]:
-        return self.process_axes + self.thread_axes
-
-    def rank_of(self, coords: dict) -> int:
-        """Unified rank for mesh coordinates — process-major (paper §2)."""
-        r = 0
-        for ax in self.unified_axes:
-            r = r * self._axis_sizes[ax] + coords[ax]
-        return r
-
-    def coords_of(self, rank: int) -> dict:
-        out = {}
-        for ax in reversed(self.unified_axes):
-            out[ax] = rank % self._axis_sizes[ax]
-            rank //= self._axis_sizes[ax]
-        return out
-
-    def process_of(self, rank: int) -> int:
-        return rank // self.threads_per_process
-
-    def group(self, ranks: Sequence[int]) -> Group:
-        self._check_active()
-        return Group(self, tuple(ranks), _epoch=self._epoch)
-
-    # attributes (paper: lifetime bounded by the activation window)
-    def set_attr(self, key, value):
-        self._check_active()
-        self._attrs[key] = value
-
-    def get_attr(self, key):
-        self._check_active()
-        return self._attrs.get(key)
-
-    # ------------------------------------------------------------------
-    # device-side rank (call inside shard_map)
-    # ------------------------------------------------------------------
-    def device_rank(self):
-        r = np.int32(0)
-        for ax in self.unified_axes:
-            r = r * self._axis_sizes[ax] + lax.axis_index(ax)
-        return r
-
-    # ------------------------------------------------------------------
-    # collectives over the unified rank space
-    # ------------------------------------------------------------------
-    def run(self, fn: Callable, *args,
-            in_specs=None, out_specs=None):
-        """shard_map a function over the full unified mesh. Default specs
-        shard the leading dim over all unified axes (SPMD over ranks)."""
-        self._check_active()
-        in_specs = in_specs if in_specs is not None else P(self.unified_axes)
-        out_specs = out_specs if out_specs is not None else P(self.unified_axes)
-        return jax.shard_map(fn, mesh=self.mesh, in_specs=in_specs,
-                             out_specs=out_specs)(*args)
-
-    # The following helpers are meant to be CALLED INSIDE a shard_map /
-    # tc.run region. They delegate to repro.core.collectives with the
-    # unified axes so flat schedules span all N*M ranks.
-    def allreduce(self, x, schedule: str = "psum"):
-        self._check_active()
-        if schedule == "hierarchical":
-            return coll.hierarchical_allreduce(
-                x, process_axes=self.process_axes,
-                thread_axes=self.thread_axes)
-        return coll.allreduce(x, self.unified_axes, schedule=schedule)
-
-    def barrier(self, token, mode: str = "msg"):
-        self._check_active()
-        return coll.barrier(token, self.unified_axes, mode=mode)
-
-    def reduce(self, x, root: int = 0, schedule: str = "binomial"):
-        self._check_active()
-        return coll.reduce(x, self.unified_axes, root=root, schedule=schedule)
-
-    def bcast(self, x, root: int = 0):
-        self._check_active()
-        return coll.bcast(x, self.unified_axes, root=root)
-
-    def allgather(self, x, tiled: bool = True):
-        self._check_active()
-        return coll.allgather(x, self.unified_axes, tiled=tiled)
-
-    def reduce_scatter(self, x):
-        self._check_active()
-        return coll.reduce_scatter(x, self.unified_axes)
-
-    def alltoall(self, x):
-        self._check_active()
-        return coll.alltoall(x, self.unified_axes)
-
-    def send_recv(self, x, pairs):
-        self._check_active()
-        return coll.sendrecv(x, self.unified_axes, pairs)
-
-
-def threadcomm_init(mesh, process_axes: Sequence[str] = (),
-                    thread_axes: Sequence[str] = None,
-                    num_threads: Optional[int] = None) -> ThreadComm:
-    """MPIX_Threadcomm_init analogue. ``num_threads``, when given, must match
-    the thread-axes product (the paper's creation-parameter check)."""
-    if thread_axes is None:
-        thread_axes = tuple(a for a in mesh.axis_names
-                            if a not in tuple(process_axes))
-    tc = ThreadComm(mesh, process_axes, thread_axes)
-    if num_threads is not None and num_threads != tc.threads_per_process:
-        raise ThreadCommError(
-            f"num_threads={num_threads} does not match the parallel region "
-            f"width {tc.threads_per_process}")
-    return tc
+from repro.core.comm import (AxisComm, Comm, CommError, CommStream,  # noqa: F401
+                             Group, GroupComm, Request, ThreadComm,
+                             ThreadCommError, threadcomm_init, testall,
+                             waitall)

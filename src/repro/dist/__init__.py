@@ -1,0 +1,11 @@
+"""Distribution layer: sharding rules over the hierarchical device mesh.
+
+``repro.dist.sharding`` turns (ModelConfig, MeshConfig, pytree) into
+PartitionSpec trees; ``repro.core.comm`` (the communication layer) consumes
+the same mesh axes for explicit collectives. Keeping the two in one `dist`
+namespace is the architectural seam the ROADMAP's sharding/async growth
+hangs off.
+"""
+
+from repro.dist.sharding import (batch_axes, batch_pspec, cache_pspecs,  # noqa: F401
+                                 named_sharding, param_pspecs)

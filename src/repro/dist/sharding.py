@@ -1,0 +1,188 @@
+"""Sharding rules: PartitionSpec trees for params, caches, and batches.
+
+One place owns the mapping from (ModelConfig, MeshConfig) to device layout:
+
+  * tensor parallelism (Megatron-style): attention heads, MLP hidden dim and
+    the vocab dim shard over ``mesh_cfg.model_axes``;
+  * FSDP / ZeRO: the remaining large dim of each weight shards over
+    ``mesh_cfg.batch_axes`` (optimizer state mirrors it — see
+    train/trainer.py ``state_pspecs``);
+  * MoE expert weights additionally shard the expert dim over the batch
+    axes (``moe_fsdp``);
+  * batches shard their leading dim over process axes × batch axes in
+    process-major order — the same unified-rank order the threadcomm /
+    ``Comm`` layer uses (DESIGN.md §2), so explicit-collective trainers and
+    SPMD trainers see identical data placement.
+
+Every rule is guarded by divisibility: a dim that the axis product does not
+divide is left unsharded rather than producing an invalid NamedSharding.
+Rules key off leaf *names* (the init functions in models/ use stable names:
+wq/wk/wv/wo, w_gate/w_up/w_down, embed/lm_head, in_proj/out_proj, ...), so
+new architectures inherit sensible layouts for free.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import MeshConfig, ModelConfig
+
+# tree keys whose children carry a stacked leading layer dim (vmap'd init)
+_STACKED_KEYS = ("blocks", "enc_blocks", "dec_blocks")
+
+
+def _axis_sizes(mesh_cfg: MeshConfig) -> dict:
+    return dict(zip(mesh_cfg.axis_names, mesh_cfg.shape))
+
+
+def _axes_prod(mesh_cfg: MeshConfig, axes: Tuple[str, ...]) -> int:
+    sizes = _axis_sizes(mesh_cfg)
+    return math.prod(sizes[a] for a in axes) if axes else 1
+
+
+def _axes_or_none(axes: Tuple[str, ...]):
+    """A PartitionSpec entry: tuple for multi-axis dims, name for one, None
+    for zero (an empty tuple in a spec is invalid)."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def batch_axes(mesh_cfg: MeshConfig):
+    """Mesh axes of the batch dim of activations/batches: process-major over
+    (process_axes, batch_axes) — the unified-rank order of DESIGN.md §2."""
+    return _axes_or_none(tuple(mesh_cfg.process_axes) + tuple(mesh_cfg.batch_axes))
+
+
+def batch_pspec(mesh_cfg: MeshConfig) -> P:
+    """Spec for data batches: leading dim sharded over the full data-parallel
+    domain (slow process axes major, fast batch axes minor)."""
+    ax = batch_axes(mesh_cfg)
+    return P() if ax is None else P(ax)
+
+
+def named_sharding(mesh: jax.sharding.Mesh, spec_tree: Any):
+    """Map a PartitionSpec tree to a NamedSharding tree on ``mesh``."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            out.append(str(entry.key))
+        elif hasattr(entry, "name"):
+            out.append(str(entry.name))
+        else:
+            out.append(str(entry))
+    return tuple(out)
+
+
+# name -> (tp_dim, fsdp_dim) in the UNSTACKED leaf shape; fsdp_dim None means
+# the leaf never FSDP-shards (biases, norms, small vectors)
+_DENSE_RULES = {
+    "wq": (1, 0), "wk": (1, 0), "wv": (1, 0),   # (d, H, hd): heads on TP
+    "wo": (0, 2),                                # (H, hd, d)
+    "bq": (0, None), "bk": (0, None), "bv": (0, None),   # (H, hd)
+    "w_gate": (1, 0), "w_up": (1, 0),            # (d, f): hidden on TP
+    "w_down": (0, 1),                            # (f, d)
+    "embed": (0, 1),                             # (V, d): vocab-parallel
+    "lm_head": (1, 0),                           # (d, V)
+    "dec_pos": (None, 1),                        # (maxpos, d)
+    "in_proj": (1, 0),                           # (d, 2di+2n+h)
+    "out_proj": (0, 1),                          # (di, d)
+}
+# MoE expert weights carry a leading expert dim: (E, d, f) / (E, f, d)
+_MOE_RULES = {
+    "w_gate": (2, 1), "w_up": (2, 1),
+    "w_down": (1, 2),
+}
+
+
+def param_pspecs(cfg: ModelConfig, mesh_cfg: MeshConfig, params: Any,
+                 *, moe_fsdp: bool = True, fsdp: bool = True):
+    """PartitionSpec tree matching ``params`` (arrays or ShapeDtypeStructs).
+
+    TP shards over ``model_axes``; FSDP shards a second dim over
+    ``batch_axes`` when enabled and divisible; MoE experts shard over the
+    batch axes when ``moe_fsdp``. Anything unmatched is replicated.
+    """
+    tp_axes = tuple(mesh_cfg.model_axes)
+    dp_axes = tuple(mesh_cfg.batch_axes)
+    tp = _axes_prod(mesh_cfg, tp_axes)
+    dp = _axes_prod(mesh_cfg, dp_axes)
+
+    def spec_for(path, leaf) -> P:
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = tuple(leaf.shape)
+        stacked = any(k in names[:-1] for k in _STACKED_KEYS)
+        off = 1 if stacked else 0
+
+        rules = _MOE_RULES if "moe" in names[:-1] else _DENSE_RULES
+        rule = rules.get(name)
+        if rule is None:
+            return P()
+        tp_dim, fsdp_dim = rule
+        entries = [None] * len(shape)
+        if (tp_dim is not None and tp > 1
+                and tp_dim + off < len(shape)
+                and shape[tp_dim + off] % tp == 0):
+            entries[tp_dim + off] = _axes_or_none(tp_axes)
+        if (fsdp and fsdp_dim is not None and dp > 1
+                and fsdp_dim + off < len(shape)
+                and shape[fsdp_dim + off] % dp == 0):
+            entries[fsdp_dim + off] = _axes_or_none(dp_axes)
+        # MoE expert dim over the batch axes (expert parallelism as FSDP)
+        if ("moe" in names[:-1] and moe_fsdp and dp > 1
+                and len(shape) > off and shape[off] % dp == 0
+                and entries[off] is None):
+            entries[off] = _axes_or_none(dp_axes)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cfg: ModelConfig, mesh_cfg: MeshConfig, cache: Any):
+    """Specs for the stacked (L, B, ...) decode-cache pytree: batch dim over
+    the data-parallel domain, kv heads over TP when they divide."""
+    tp_axes = tuple(mesh_cfg.model_axes)
+    tp = _axes_prod(mesh_cfg, tp_axes)
+    dp_all = tuple(mesh_cfg.process_axes) + tuple(mesh_cfg.batch_axes)
+    dp = _axes_prod(mesh_cfg, dp_all)
+    b_ax = _axes_or_none(dp_all)
+
+    def spec_for(path, leaf) -> P:
+        name = _path_names(path)[-1]
+        shape = tuple(leaf.shape)
+        if name == "pos" or len(shape) < 2:
+            return P()
+        entries = [None] * len(shape)
+        if dp > 1 and shape[1] % dp == 0:
+            entries[1] = b_ax
+        # kv / state head dims: (L, B, S, G, hd) or (L, B, H, p, n)
+        head_dim = {"k": 3, "v": 3, "cross_k": 3, "cross_v": 3, "ssm": 2}.get(name)
+        if (head_dim is not None and tp > 1 and head_dim < len(shape)
+                and shape[head_dim] % tp == 0):
+            entries[head_dim] = _axes_or_none(tp_axes)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)

@@ -219,7 +219,10 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
     t_compile = time.time() - t0
     if verbose:
         print(compiled.memory_analysis())   # proves it fits
-        print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+        cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # old jax: per-device dicts
+            cost = cost[0] if cost else {}
+        print({k: v for k, v in cost.items()
                if k in ("flops", "bytes accessed")})
 
     # analytical compute/memory terms (HLO cost_analysis counts scan bodies

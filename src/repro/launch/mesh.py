@@ -9,14 +9,13 @@ from __future__ import annotations
 import jax
 
 from repro.config import MULTI_POD, SINGLE_POD, MeshConfig
+from repro.core.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def production_mesh_config(*, multi_pod: bool = False) -> MeshConfig:
@@ -24,6 +23,4 @@ def production_mesh_config(*, multi_pod: bool = False) -> MeshConfig:
 
 
 def make_mesh_from_config(mesh_cfg: MeshConfig) -> jax.sharding.Mesh:
-    return jax.make_mesh(
-        mesh_cfg.shape, mesh_cfg.axis_names,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_cfg.axis_names))
+    return make_mesh(mesh_cfg.shape, mesh_cfg.axis_names)

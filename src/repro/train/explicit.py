@@ -1,27 +1,38 @@
 """Explicit (threadcomm) trainer: the paper's technique as a first-class
-training feature.
+training feature, expressed through the unified ``Comm`` API.
 
 The fwd/bwd runs inside a shard_map that is MANUAL over the unified data-
 parallel rank space — process axes ("pod") × thread axes ("data") — exactly
 the threadcomm construction: every (pod, data) coordinate is one unified
 rank computing local gradients. Tensor parallelism ("model") stays auto.
 
-Gradient sync is the paper's two-level hierarchical schedule FUSED with a
-ZeRO-1 flat optimizer:
+Gradient sync is the paper's two-level hierarchical schedule, built from
+DERIVED sub-communicators (DESIGN.md §2) and FUSED with a ZeRO-1 flat
+optimizer:
 
-    flat_g   = concat(all grad leaves)            # one flat f32 vector
-    shard    = psum_scatter(flat_g, thread_axes)  # fast domain (ICI)
-    shard    = psum(shard, process_axes)          # slow domain, bytes/M
-    shard'   = AdamW(shard)                       # state lives as shards
-    params   = unflatten(all_gather(shard', thread_axes))  # fast domain
+    flat_g   = concat(all grad leaves)               # one flat f32 vector
+    shard    = thread_comm.reduce_scatter(flat_g)    # fast domain (ICI)
+    req      = process_comm.iallreduce(shard)        # slow domain, bytes/M,
+                                                     #   issued on the "grad"
+                                                     #   CommStream
+    ... step bookkeeping overlaps the slow-domain sync ...
+    shard    = req.wait()
+    shard'   = AdamW(shard)                          # state lives as shards
+    params   = unflatten(thread_comm.allgather(shard'))   # fast domain
 
 so the inter-pod (slow) traffic is params/M bytes — the paper's "do the bulk
-in the fast shared domain" insight — and optimizer state is sharded over the
-thread domain for free (ZeRO-1).
+in the fast shared domain" insight — optimizer state is sharded over the
+thread domain for free (ZeRO-1), and the slow-domain allreduce is a
+nonblocking Request the step overlaps with local work (the MPIX-stream
+pattern of arXiv:2208.13707).
 
 grad_sync="flat" keeps the same state layout but reduces the FULL flat
-vector over (process × thread) before slicing — the rank-unaware
-MPI-everywhere baseline the paper compares against.
+vector over the root comm (process × thread) before slicing — the rank-
+unaware MPI-everywhere baseline the paper compares against.
+
+The root comm is activated in service mode (``comm.start()`` without a
+``with``): the trainer is a long-lived parallel region, and the traced
+requests/sub-comms stay inside its activation window.
 """
 
 from __future__ import annotations
@@ -36,6 +47,8 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import MeshConfig, TrainConfig
+from repro.core.comm import threadcomm_init
+from repro.core.compat import HAS_PARTIAL_MANUAL, shard_map
 from repro.dist.sharding import batch_pspec, named_sharding, param_pspecs
 from repro.optim import cosine_schedule
 
@@ -101,10 +114,18 @@ def make_explicit_train_step(model, mesh_cfg: MeshConfig, tcfg: TrainConfig,
     proc_axes = tuple(mesh_cfg.process_axes)
     thread_axes = tuple(mesh_cfg.batch_axes)
     dp_axes = proc_axes + thread_axes
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    npods = int(np.prod([sizes[a] for a in proc_axes])) if proc_axes else 1
-    dp = int(np.prod([sizes[a] for a in dp_axes]))
-    m_thread = int(np.prod([sizes[a] for a in thread_axes]))
+
+    # the root communicator over the unified DP rank space; thread_comm /
+    # process_comm are the load-bearing derived sub-comms of the two-level
+    # schedule. Service-mode activation: the trainer IS the parallel region.
+    comm = threadcomm_init(mesh, process_axes=proc_axes,
+                           thread_axes=thread_axes)
+    comm.start()
+    tcomm = comm.thread_comm()
+    pcomm = comm.process_comm()
+    dp = comm.size
+    m_thread = comm.threads_per_process
+    wire = (jnp.bfloat16 if tcfg.grad_comm_dtype == "bfloat16" else None)
 
     def inner(state: ExplicitTrainState, batch):
         (loss, metrics), grads = jax.value_and_grad(
@@ -113,46 +134,40 @@ def make_explicit_train_step(model, mesh_cfg: MeshConfig, tcfg: TrainConfig,
         plen = state.opt.master.size * m_thread  # global padded length
         flat_g = jnp.pad(flat_g, (0, plen - flat_g.size))
 
+        opt = state.opt
+        step = opt.step + 1
+
         if tcfg.grad_sync == "flat":
             # rank-unaware: full bytes cross every domain, then local slice
-            full = lax.psum(flat_g, dp_axes) / dp
-            rank = lax.axis_index(thread_axes) if thread_axes else 0
+            full = comm.allreduce(flat_g) / dp
+            rank = tcomm.local_rank()
             shard_len = plen // m_thread
             g_shard = lax.dynamic_slice_in_dim(full, rank * shard_len,
                                                shard_len)
-        else:  # "threadcomm": hierarchical two-level
-            g_shard = flat_g
-            if thread_axes:
-                g_shard = lax.psum_scatter(g_shard, thread_axes,
-                                           scatter_dimension=0, tiled=True)
-            if proc_axes:
-                if tcfg.grad_comm_dtype == "bfloat16":
-                    # compress the SLOW-domain (inter-pod) wire format —
-                    # halves DCN bytes. Implemented as recursive-doubling
-                    # ppermute exchanges (the paper's pt2pt-based collective;
-                    # also dodges an XLA bug in bf16 reduce computations
-                    # under manual axes). f32 accumulation per round.
-                    from repro.core.schedules import recursive_doubling_rounds
-                    for rnd in recursive_doubling_rounds(npods):
-                        recv = lax.ppermute(g_shard.astype(jnp.bfloat16),
-                                            proc_axes, rnd)
-                        g_shard = g_shard + recv.astype(jnp.float32)
-                else:
-                    g_shard = lax.psum(g_shard, proc_axes)
+        else:  # "threadcomm": hierarchical two-level via derived sub-comms
+            g_shard = (tcomm.reduce_scatter(flat_g)
+                       if tcomm.size > 1 else flat_g)
+            if pcomm.size > 1:
+                # nonblocking slow-domain sync on the "grad" stream; the
+                # wire dtype compresses inter-pod bytes (level-1 gradient
+                # compression). Only this stream orders against the
+                # request — everything between issue and wait() may
+                # overlap the inter-pod transfer.
+                with comm.stream("grad"):
+                    req = pcomm.iallreduce(g_shard, wire_dtype=wire)
+                g_shard = req.wait()
             g_shard = g_shard / dp
 
         # global grad-norm from shards (for clipping)
         gn2 = jnp.sum(jnp.square(g_shard))
-        if thread_axes:
-            gn2 = lax.psum(gn2, thread_axes)
+        if tcomm.size > 1:
+            gn2 = tcomm.allreduce(gn2)
         gnorm = jnp.sqrt(gn2)
         scale = jnp.where(tcfg.grad_clip > 0,
                           jnp.minimum(1.0, tcfg.grad_clip / (gnorm + 1e-9)),
                           1.0)
 
         # fused flat AdamW on the shard (ZeRO-1)
-        opt = state.opt
-        step = opt.step + 1
         t = step.astype(jnp.float32)
         g = g_shard * scale
         m = tcfg.beta1 * opt.m + (1 - tcfg.beta1) * g
@@ -168,27 +183,31 @@ def make_explicit_train_step(model, mesh_cfg: MeshConfig, tcfg: TrainConfig,
         # bf16, not f32 — half the intra-pod bytes)
         cast = new_master.astype(
             jax.tree_util.tree_leaves(state.params)[0].dtype)
-        full_new = (lax.all_gather(cast, thread_axes, tiled=True)
-                    if thread_axes else cast)
+        full_new = (tcomm.allgather(cast, tiled=True)
+                    if tcomm.size > 1 else cast)
         new_params = unflatten_like(full_new.astype(jnp.float32),
                                     state.params)
 
         metrics = {**metrics, "grad_norm": gnorm, "lr": lr}
         metrics = jax.tree_util.tree_map(
-            lambda x: lax.pmean(x, dp_axes), metrics)
+            lambda x: comm.allreduce(x) / dp, metrics)
         new_state = ExplicitTrainState(
             params=new_params,
             opt=FlatAdamState(step=step, m=m, v=v, master=new_master))
         return new_state, metrics
 
-    # manual over the unified DP rank space; "model" stays auto (TP)
+    # manual over the unified DP rank space; "model" stays auto (TP) where
+    # the jax/XLA stack supports partial-manual regions. Old XLA miscompiles
+    # all-gather/ppermute inside manual subgroups, so there we take the
+    # whole mesh manual: TP-degree-redundant compute, identical numerics.
     shard_spec = P(thread_axes) if thread_axes else P()
     state_in_specs = ExplicitTrainState(
         params=jax.tree_util.tree_map(lambda _: P(), model_params_struct(model)),
         opt=FlatAdamState(step=P(), m=shard_spec, v=shard_spec,
                           master=shard_spec))
-    mapped = jax.shard_map(
-        inner, mesh=mesh, axis_names=set(dp_axes),
+    manual_axes = set(dp_axes) if HAS_PARTIAL_MANUAL else None
+    mapped = shard_map(
+        inner, mesh=mesh, axis_names=manual_axes,
         in_specs=(state_in_specs, P(dp_axes)),
         out_specs=(state_in_specs, P()), check_vma=False)
 

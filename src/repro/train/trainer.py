@@ -4,16 +4,17 @@ The threadcomm technique enters here (DESIGN.md §2): the "pod" mesh axis is
 the paper's process domain, intra-pod axes are the thread domain.
 
   grad_sync="spmd"        XLA-inserted collectives end to end (baseline).
-  grad_sync="threadcomm"  outer shard_map is MANUAL over the pod axis, the
-                          intra-pod axes stay auto: XLA reduces gradients in
-                          the fast domain to their FSDP shards, then ONE
-                          explicit psum over "pod" moves only params/M bytes
-                          across the slow domain — the paper's two-level
-                          hierarchical schedule (fast-domain first).
+  grad_sync="threadcomm"  explicit trainer over the unified ``Comm`` API
+                          (train/explicit.py): the root ThreadComm's derived
+                          thread_comm/process_comm sub-communicators compose
+                          the two-level hierarchical schedule — fast-domain
+                          reduce_scatter, then a nonblocking slow-domain
+                          ``iallreduce`` Request on a CommStream moving only
+                          params/M bytes inter-pod, overlapped with step
+                          bookkeeping, then fast-domain allgather.
   grad_sync="flat"        deliberately rank-unaware baseline (MPI-everywhere
-                          analogue): gradients are constrained to replicated
-                          before the inter-pod psum, so FULL parameter bytes
-                          cross the slow domain.
+                          analogue): one root-comm allreduce of the FULL
+                          flat gradient across every domain.
 
 Fault-tolerance hooks: the step function is pure; checkpoint.py snapshots
 (params, opt, data step) atomically, restores onto any mesh (elastic).

@@ -17,13 +17,15 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 from functools import partial
 
+from repro.core.compat import make_mesh, shard_map
+
 
 def _flat_mesh(n=8):
-    return jax.make_mesh((n,), ("ranks",))
+    return make_mesh((n,), ("ranks",))
 
 
 def _hier_mesh(n=2, m=4):
-    return jax.make_mesh((n, m), ("proc", "thread"))
+    return make_mesh((n, m), ("proc", "thread"))
 
 
 # ---------------------------------------------------------------------------
@@ -35,7 +37,7 @@ def case_collectives_flat():
     x = jnp.arange(n, dtype=jnp.float32) + 1.0          # rank r holds r+1
 
     def run(fn, inp=x, out_specs=P("ranks")):
-        return jax.shard_map(fn, mesh=mesh, in_specs=P("ranks"),
+        return shard_map(fn, mesh=mesh, in_specs=P("ranks"),
                              out_specs=out_specs)(inp)
 
     # barrier (msg): output token must be max over all ranks
@@ -58,7 +60,7 @@ def case_collectives_flat():
     # allreduce schedules agree with psum
     for schedule in ("psum", "recursive_doubling", "ring", "reduce_bcast"):
         big = jnp.arange(n * 24, dtype=jnp.float32).reshape(n, 24)
-        out = jax.shard_map(
+        out = shard_map(
             lambda v: coll.allreduce(v, "ranks", schedule=schedule),
             mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"))(big)
         want = np.tile(np.asarray(big).reshape(n, 24).sum(0), (n, 1))
@@ -67,21 +69,21 @@ def case_collectives_flat():
 
     # allgather / reduce_scatter round trip == psum
     vec = jnp.arange(n * 4, dtype=jnp.float32)
-    rs_ag = jax.shard_map(
+    rs_ag = shard_map(
         lambda v: coll.allgather(coll.reduce_scatter(v, "ranks"), "ranks"),
         mesh=mesh, in_specs=P(None), out_specs=P(None), check_vma=False)(vec)
     assert np.allclose(np.asarray(rs_ag), np.asarray(vec) * n)
 
     # alltoall: transpose of rank/chunk grid
     mat = jnp.arange(n * n, dtype=jnp.float32).reshape(n, n)
-    a2a = jax.shard_map(
+    a2a = shard_map(
         lambda v: coll.alltoall(v.reshape(n, 1), "ranks").reshape(1, n),
         mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks"))(mat)
     assert np.allclose(np.asarray(a2a), np.asarray(mat).T)
 
     # sendrecv: explicit pairs (ring shift by 2)
     pairs = [(i, (i + 2) % n) for i in range(n)]
-    sr = jax.shard_map(lambda v: coll.sendrecv(v, "ranks", pairs),
+    sr = shard_map(lambda v: coll.sendrecv(v, "ranks", pairs),
                        mesh=mesh, in_specs=P("ranks"),
                        out_specs=P("ranks"))(x)
     want = np.roll(np.asarray(x), 2)
@@ -173,7 +175,7 @@ def case_p2p_protocols():
             recv, _ = p2p.send_recv(v, "ranks", pairs)
             return recv
 
-        out = jax.shard_map(f, mesh=mesh, in_specs=P("ranks"),
+        out = shard_map(f, mesh=mesh, in_specs=P("ranks"),
                             out_specs=P("ranks"))(x)
         want = np.roll(np.asarray(x), 1, axis=0)
         assert np.allclose(np.asarray(out), want), elems
@@ -187,7 +189,7 @@ def case_p2p_protocols():
         fl, fr = p2p.halo_exchange_1d(v, "ranks", n)
         return jnp.concatenate([fl, fr], 0)
 
-    out = jax.shard_map(g, mesh=mesh, in_specs=P("ranks"),
+    out = shard_map(g, mesh=mesh, in_specs=P("ranks"),
                         out_specs=P("ranks"))(x)
     out = np.asarray(out).reshape(n, 2, 4)
     xs = np.asarray(x).reshape(n, 1, 4)
@@ -213,7 +215,7 @@ def case_hierarchical_collective_bytes():
                                            thread_axes=("thread",))
 
     def hlo(fn):
-        return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P(None),
+        return jax.jit(shard_map(fn, mesh=mesh, in_specs=P(None),
                                      out_specs=P(None), check_vma=False)
                        ).lower(x).compile().as_text()
 
@@ -238,7 +240,7 @@ def case_grad_sync_parity():
     mesh_cfg = MeshConfig(shape=(2, 2, 2),
                           axis_names=("pod", "data", "model"),
                           process_axes=("pod",))
-    mesh = jax.make_mesh(mesh_cfg.shape, mesh_cfg.axis_names)
+    mesh = make_mesh(mesh_cfg.shape, mesh_cfg.axis_names)
     pipe = SyntheticPipeline(cfg, batch=8, seq_len=16, seed=0)
     b_shard = NamedSharding(mesh, batch_pspec(mesh_cfg))
 
@@ -290,8 +292,8 @@ def case_elastic_remesh():
 
     mesh_a_cfg = MeshConfig(shape=(2, 4), axis_names=("data", "model"))
     mesh_b_cfg = MeshConfig(shape=(4, 2), axis_names=("data", "model"))
-    mesh_a = jax.make_mesh(mesh_a_cfg.shape, mesh_a_cfg.axis_names)
-    mesh_b = jax.make_mesh(mesh_b_cfg.shape, mesh_b_cfg.axis_names)
+    mesh_a = make_mesh(mesh_a_cfg.shape, mesh_a_cfg.axis_names)
+    mesh_b = make_mesh(mesh_b_cfg.shape, mesh_b_cfg.axis_names)
 
     spec_a = param_pspecs(cfg, mesh_a_cfg, state.params)
     params_a = jax.device_put(state.params,
@@ -319,7 +321,7 @@ def case_spmv_distributed():
         mesh = _flat_mesh(8)
         x = jax.random.normal(jax.random.PRNGKey(n), (n, n, n))
         mm = make_distributed_matmult("ranks", 8)
-        y = jax.jit(jax.shard_map(mm, mesh=mesh, in_specs=P("ranks"),
+        y = jax.jit(shard_map(mm, mesh=mesh, in_specs=P("ranks"),
                                   out_specs=P("ranks")))(x)
         ref = stencil_matmult_ref(x)
         assert np.allclose(np.asarray(y), np.asarray(ref), atol=1e-4), n
@@ -353,7 +355,7 @@ def case_grad_compression_parity():
     mesh_cfg = MeshConfig(shape=(2, 2, 2),
                           axis_names=("pod", "data", "model"),
                           process_axes=("pod",))
-    mesh = jax.make_mesh(mesh_cfg.shape, mesh_cfg.axis_names)
+    mesh = make_mesh(mesh_cfg.shape, mesh_cfg.axis_names)
     pipe = SyntheticPipeline(cfg, batch=8, seq_len=16, seed=0)
     b_shard = NamedSharding(mesh, batch_pspec(mesh_cfg))
     losses = {}
@@ -376,6 +378,245 @@ def case_grad_compression_parity():
     assert np.allclose(losses["bfloat16"], losses["float32"],
                        rtol=2e-2, atol=2e-2), losses
     print("losses:", losses)
+    print("CASE-OK")
+
+
+def case_comm_split_dup():
+    """Unified Comm API: split/dup derivation and rank translation over a
+    2-axis (process × thread) mesh."""
+    from repro.core.comm import (AxisComm, GroupComm, ThreadCommError,
+                                 threadcomm_init)
+    n_proc, m_thread = 2, 4
+    mesh = _hier_mesh(n_proc, m_thread)
+    tc = threadcomm_init(mesh, process_axes=("proc",), thread_axes=("thread",))
+    with tc.start():
+        # canonical derivations
+        tcm, pcm = tc.thread_comm(), tc.process_comm()
+        assert tcm.size == m_thread and pcm.size == n_proc
+        # thread_comm families: one per process, local rank == thread index
+        assert tcm.families() == [[0, 1, 2, 3], [4, 5, 6, 7]]
+        assert pcm.families() == [[0, 4], [1, 5], [2, 6], [3, 7]]
+        assert tcm.translate(2, family=1) == 6
+        assert pcm.translate(1, family=3) == 7
+
+        # split by process color == thread_comm (axis-aligned fast path)
+        s = tc.split([r // m_thread for r in range(tc.size)])
+        assert isinstance(s, AxisComm) and s.axes == ("thread",), s
+        # split by thread color == process_comm
+        s2 = tc.split([r % m_thread for r in range(tc.size)])
+        assert isinstance(s2, AxisComm) and s2.axes == ("proc",)
+        # color=constant == dup of the whole comm
+        s3 = tc.split([0] * tc.size)
+        assert isinstance(s3, AxisComm) and set(s3.axes) == {"proc", "thread"}
+        # non-grid split (parity classes) takes the generic path
+        g = tc.split([r % 2 for r in range(tc.size)])
+        assert isinstance(g, GroupComm)
+        assert g.groups == ((0, 2, 4, 6), (1, 3, 5, 7))
+        assert g.translate(1, family=1) == 3
+        # key reorders local ranks within a class
+        gk = tc.split([0] * tc.size, key=list(range(tc.size))[::-1])
+        assert gk.families()[0] == list(range(tc.size))[::-1]
+        # MPI_UNDEFINED: negative color joins no class
+        gu = tc.split([0, 0, 0, 0, -1, -1, -1, -1])
+        assert gu.families() == [[0, 1, 2, 3]]
+        # dup: same group, fresh context
+        d = tc.dup()
+        assert d.size == tc.size and d is not tc
+        assert tcm.dup().families() == tcm.families()
+        # bad color vector length
+        try:
+            tc.split([0])
+            raise SystemExit("short color vector should have raised")
+        except ThreadCommError:
+            pass
+    tc.free()
+    print("CASE-OK")
+
+
+def case_comm_subcomm_collectives():
+    """Derived sub-comm collectives on a ≥2-axis mesh: axis-aligned split
+    classes reduce independently; generic (non-grid) classes agree with a
+    per-class oracle; hierarchical allreduce is the sub-comm composition
+    and matches flat psum."""
+    from repro.core.comm import AxisComm, GroupComm, threadcomm_init
+    n_proc, m_thread = 2, 4
+    mesh = _hier_mesh(n_proc, m_thread)
+    tc = threadcomm_init(mesh, process_axes=("proc",), thread_axes=("thread",))
+    x = jnp.arange(float(tc.size)) + 1.0          # rank r holds r+1
+    with tc.start():
+        # per-process sums via the split-derived thread comm
+        sub = tc.split([r // m_thread for r in range(tc.size)])
+        out = tc.run(lambda v: sub.allreduce(v), x)
+        want = np.array([sum(range(1, 5))] * 4 + [sum(range(5, 9))] * 4, float)
+        assert np.allclose(np.asarray(out), want), out
+
+        # generic split: parity classes, ring path
+        g = tc.split([r % 2 for r in range(tc.size)])
+        out = tc.run(lambda v: g.allreduce(v), x)
+        want = np.zeros(tc.size)
+        for grp in g.groups:
+            s = sum(r + 1.0 for r in grp)
+            for r in grp:
+                want[r] = s
+        assert np.allclose(np.asarray(out), want), (out, want)
+        # bcast from class-local root 0
+        outb = tc.run(lambda v: g.bcast(v, root=0), x)
+        wantb = np.zeros(tc.size)
+        for grp in g.groups:
+            for r in grp:
+                wantb[r] = grp[0] + 1.0
+        assert np.allclose(np.asarray(outb), wantb), (outb, wantb)
+        # allgather (uniform classes): every rank sees its class's vector;
+        # tiled (interface default) and stacked agree
+        outg = tc.run(lambda v: g.allgather(v[0], tiled=False)[None].sum(1),
+                      x[:, None])
+        assert np.allclose(np.asarray(outg).ravel(), want), outg
+        outt = tc.run(lambda v: g.allgather(v)[:1] * 0
+                      + g.allgather(v).sum(), x[:, None])
+        assert np.allclose(np.asarray(outt).ravel(), want), outt
+
+        # hierarchical allreduce == flat psum, both compositions
+        vec = jnp.arange(tc.size * 13, dtype=jnp.float32).reshape(tc.size, 13)
+        flat = tc.run(lambda v: tc.allreduce(v, schedule="psum"), vec)
+        for sched in ("hierarchical", "hierarchical_tree"):
+            h = tc.run(lambda v, s=sched: tc.allreduce(v, schedule=s), vec)
+            assert np.allclose(np.asarray(h), np.asarray(flat),
+                               rtol=1e-5), sched
+        # sub-comm p2p: ring shift within each process via thread_comm
+        tcm = tc.thread_comm()
+        pairs = [(i, (i + 1) % m_thread) for i in range(m_thread)]
+        sr = tc.run(lambda v: tcm.send_recv(v, pairs), x)
+        want = np.concatenate([np.roll(np.asarray(x)[:4], 1),
+                               np.roll(np.asarray(x)[4:], 1)])
+        assert np.allclose(np.asarray(sr), want), sr
+    tc.free()
+    print("CASE-OK")
+
+
+def case_comm_requests():
+    """Request-based nonblocking ops: iallreduce == blocking allreduce,
+    wait/test protocol, stream-ordered issue, isend/irecv protocol cost."""
+    from repro.core import protocol
+    from repro.core.comm import threadcomm_init, waitall
+    n_proc, m_thread = 2, 4
+    mesh = _hier_mesh(n_proc, m_thread)
+    tc = threadcomm_init(mesh, process_axes=("proc",), thread_axes=("thread",))
+    x = jnp.arange(float(tc.size))
+    with tc.start():
+        blocking = tc.run(lambda v: tc.allreduce(v), x)
+
+        def nonblocking(v):
+            req = tc.iallreduce(v)
+            done, _ = req.test()     # under trace the op is scheduled
+            assert done
+            return req.wait()
+        got = tc.run(nonblocking, x)
+        assert np.allclose(np.asarray(got), np.asarray(blocking))
+
+        # stream-ordered pipeline: two dependent requests on one stream
+        tcm, pcm = tc.thread_comm(), tc.process_comm()
+
+        def pipeline(v):
+            flat = v.reshape(-1)                 # (8,) per rank
+            with tc.stream("grad") as s:
+                r1 = tcm.ireduce_scatter(flat)   # (2,) shard, fast domain
+                r2 = pcm.iallreduce(r1.wait())   # slow domain on 1/M bytes
+                full = tcm.iallgather(r2.wait()).wait()
+                assert len(s._requests) == 3
+            return full.reshape(v.shape)
+        payload = jnp.tile(x[:, None], (1, 8))
+        out = tc.run(pipeline, payload)
+        flat = tc.run(lambda v: tc.allreduce(v), payload)
+        assert np.allclose(np.asarray(out), np.asarray(flat))
+
+        # waitall preserves order
+        def many(v):
+            reqs = [tc.iallreduce(v), tc.iallreduce(2 * v)]
+            a, b = waitall(reqs)
+            return a + b
+        out = tc.run(many, x)
+        assert np.allclose(np.asarray(out), 3 * np.asarray(x).sum())
+
+        # isend: small INTERTHREAD payloads ride the request-free eager
+        # fast path; the root comm crosses processes, so its messages
+        # always pay the request object (the fast path is §3.2's
+        # interthread-only optimization)
+        tpairs = [(i, (i + 1) % m_thread) for i in range(m_thread)]
+        def ring_thread(v):
+            req = tcm.isend(v, tpairs)
+            assert req.model_overhead_s == 0.0       # eager_fast
+            return req.wait()
+        out = tc.run(ring_thread, x)
+        want = np.concatenate([np.roll(np.asarray(x)[:4], 1),
+                               np.roll(np.asarray(x)[4:], 1)])
+        assert np.allclose(np.asarray(out), want)
+        pairs = [(i, (i + 1) % tc.size) for i in range(tc.size)]
+        def ring_root(v):
+            req = tc.isend(v, pairs)
+            assert req.model_overhead_s > 0.0        # cross-process
+            return req.wait()
+        out = tc.run(ring_root, x)
+        assert np.allclose(np.asarray(out), np.roll(np.asarray(x), 1))
+        big = jnp.zeros((tc.size, 1 << 12), jnp.float32)
+        def ring_big(v):
+            req = tcm.isend(v, tpairs)
+            assert req.model_overhead_s > 0.0        # one_copy: real request
+            return req.wait()
+        tc.run(ring_big, big)
+        assert protocol.request_overhead(64) == 0.0
+        assert protocol.request_overhead(1 << 20) > 0.0
+    tc.free()
+    print("CASE-OK")
+
+
+def case_comm_epoch_invalidation():
+    """Activation-window semantics extend to derived comms and requests:
+    anything issued inside a window dies at finish() (paper §2)."""
+    from repro.core.comm import ThreadCommError, threadcomm_init
+    mesh = _hier_mesh(2, 4)
+    tc = threadcomm_init(mesh, process_axes=("proc",), thread_axes=("thread",))
+    x = jnp.arange(8.0)
+
+    captured = {}
+    with tc.start():
+        captured["sub"] = tc.thread_comm()
+        captured["dup"] = tc.dup()
+        captured["split"] = tc.split([r % 2 for r in range(8)])
+
+        def issue(v):
+            captured["req"] = tc.iallreduce(v)
+            return captured["req"].wait()        # valid inside the window
+        out = tc.run(issue, x)
+        assert np.allclose(np.asarray(out), np.asarray(x).sum())
+        req2 = captured["req"]
+        assert req2.test()[0]                    # still inside the window
+
+    # window closed: every derived object must refuse to operate
+    with tc.start():
+        for name in ("sub", "dup", "split"):
+            try:
+                captured[name].dup()
+                raise SystemExit(f"stale {name} comm should have raised")
+            except ThreadCommError:
+                pass
+        try:
+            captured["req"].wait()
+            raise SystemExit("stale request should have raised")
+        except ThreadCommError:
+            pass
+        try:
+            captured["req"].test()
+            raise SystemExit("stale request test() should have raised")
+        except ThreadCommError:
+            pass
+        # a fresh window issues fresh derived objects that DO work
+        fresh = tc.thread_comm()
+        out = tc.run(lambda v: fresh.allreduce(v), x)
+        assert np.allclose(
+            np.asarray(out),
+            np.concatenate([np.full(4, np.asarray(x)[:4].sum()),
+                            np.full(4, np.asarray(x)[4:].sum())]))
+    tc.free()
     print("CASE-OK")
 
 

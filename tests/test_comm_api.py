@@ -1,0 +1,82 @@
+"""Unified ``Comm`` API (core/comm.py): split/dup derivation and rank
+translation, sub-comm collectives on multi-axis meshes, request-based
+nonblocking ops with stream ordering, and epoch invalidation of derived
+objects across ``finish()`` — the DESIGN.md §2 contract.
+
+Multi-device semantics run as subprocess cases (see tests/helpers.py);
+host-side lifecycle rules that need no devices run in-process.
+"""
+
+import pytest
+
+from tests.helpers import run_case
+
+
+def test_comm_split_dup_translation():
+    run_case("comm_split_dup", ndev=8)
+
+
+def test_subcomm_collectives_two_axis_mesh():
+    run_case("comm_subcomm_collectives", ndev=8)
+
+
+def test_requests_wait_test_ordering():
+    run_case("comm_requests", ndev=8)
+
+
+def test_epoch_invalidation_across_finish():
+    run_case("comm_epoch_invalidation", ndev=8)
+
+
+# ---------------------------------------------------------------------------
+# host-side lifecycle rules (single device, no shard_map)
+# ---------------------------------------------------------------------------
+
+def _single_device_comm():
+    jax = pytest.importorskip("jax")
+    from repro.core.comm import threadcomm_init
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((1,), ("ranks",))
+    return threadcomm_init(mesh, process_axes=(), thread_axes=("ranks",))
+
+
+def test_inactive_comm_refuses_everything():
+    from repro.core.comm import ThreadCommError
+    tc = _single_device_comm()
+    for call in (lambda: tc.thread_comm(), lambda: tc.dup(),
+                 lambda: tc.split([0]), lambda: tc.stream("s"),
+                 lambda: tc.group([0])):
+        with pytest.raises(ThreadCommError):
+            call()
+
+
+def test_service_mode_start_finish_free():
+    from repro.core.comm import ThreadCommError
+    tc = _single_device_comm()
+    tc.start()                      # bare start: long-lived activation
+    sub = tc.thread_comm()
+    assert sub.size == 1
+    with pytest.raises(ThreadCommError):
+        tc.start()                  # nested start forbidden
+    with pytest.raises(ThreadCommError):
+        tc.free()                   # free-while-active forbidden
+    tc.finish()
+    with pytest.raises(ThreadCommError):
+        sub.dup()                   # derived object died at finish
+    with pytest.raises(ThreadCommError):
+        tc.finish()                 # unmatched finish
+    tc.free()
+    with pytest.raises(ThreadCommError):
+        tc.start()                  # freed comm is gone
+
+
+def test_split_validation():
+    from repro.core.comm import ThreadCommError
+    tc = _single_device_comm()
+    with tc.start():
+        with pytest.raises(ThreadCommError):
+            tc.split([0, 1])        # wrong color length
+        with pytest.raises(ThreadCommError):
+            tc.split([0], key=[0, 1])   # wrong key length
+        gone = tc.split([-1])       # MPI_UNDEFINED everywhere
+        assert gone.families() == []

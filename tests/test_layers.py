@@ -6,7 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models import layers as L
 

@@ -3,7 +3,12 @@ the system invariants behind every executable collective."""
 
 import math
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import schedules as sch
 

@@ -1,0 +1,55 @@
+"""Serving bench: continuous batching vs static batch on a mixed-arrival
+trace (DESIGN.md §8), plus the greedy parity check.
+
+Rows land in ``BENCH_serve.json`` via ``run.py --only serve --json ...``;
+the comparison rows carry ``verified=`` flags so the artifact records
+that the continuous engine's tok/s strictly exceeded the static engine's
+on the same trace, and that the two are token-identical on a same-arrival
+greedy batch.
+
+Runs in-process on the single CPU device (the engines are host loops over
+jit'd steps; no multi-device subprocess needed), so it is part of the
+``--fast`` path.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+from benchmarks.common import Row
+
+# mixed-arrival trace tuned so decode compute (not arrival waiting)
+# dominates: static pays batch formation + decode-to-the-slowest tail
+TRACE = dict(requests=16, slots=4, prompt_len=16, max_new=(4, 48),
+             arrival="poisson", rate=400.0, seed=0)
+# --fast: same shape of comparison, smaller trace (the bench-smoke CI job
+# runs every module fast; the dedicated serve-smoke job runs the full one)
+TRACE_FAST = dict(requests=8, slots=2, prompt_len=16, max_new=(2, 24),
+                  arrival="poisson", rate=400.0, seed=0)
+
+
+def rows(fast: bool = False) -> Iterator[Row]:
+    from repro.launch.serve import run_traffic
+    res = run_traffic("gemma-2b", smoke=True, engine="both",
+                      parity_check=True, **(TRACE_FAST if fast else TRACE))
+
+    for eng in ("static", "continuous"):
+        m = res[eng]
+        us_per_tok = 1e6 / m["tok_s"]
+        yield (f"serve_{eng}_us_per_tok", us_per_tok,
+               f"tok_s={m['tok_s']:.1f} p50_ms={m['latency_p50_s']*1e3:.1f} "
+               f"p95_ms={m['latency_p95_s']*1e3:.1f} "
+               f"makespan_s={m['makespan_s']:.3f}")
+
+    spd = res["speedup_tok_s"]
+    yield ("serve_continuous_speedup", spd,
+           f"continuous/static tok_s on {res['requests']}-req "
+           f"{res['arrival']} trace; verified="
+           f"{res['continuous_faster_verified']}")
+    yield ("serve_parity_greedy", 0.0,
+           f"token_identical={res['parity_token_identical']} "
+           f"(ContinuousEngine vs StaticEngine, same-arrival batch)")
+    sched = res["continuous"]
+    yield ("serve_admission_model_us", sched["modeled_admit_cost_us"],
+           f"cell-queue eager_admits={int(sched['eager_admits'])} "
+           f"deferred={int(sched['deferred'])} (protocol §3.2 model)")

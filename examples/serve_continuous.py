@@ -1,0 +1,79 @@
+"""Continuous-batching serving demo against the threadcomm substrate.
+
+Requests stream in on a Poisson trace; the cell-queue scheduler admits
+them against the paper's bounded cell pool (eager buffering for small
+prompts, rendezvous deferral for large ones), the slot-pool KV cache
+recycles decode state across in-flight requests, and prefill/decode
+micro-steps are ordered on two distinct ``CommStream``s of a root
+threadcomm — the serving substrate of DESIGN.md §8 in ~60 lines.
+
+Run:  PYTHONPATH=src python examples/serve_continuous.py
+"""
+
+import jax
+import numpy as np
+
+from repro.config import ServeConfig, TrainConfig
+from repro.configs import get_smoke_config
+from repro.core import threadcomm_init
+from repro.core.compat import make_mesh
+from repro.models.registry import build_model, make_synthetic_batch
+from repro.serve import (CellQueueScheduler, ContinuousEngine, ServeRequest,
+                         StaticEngine, make_trace)
+
+SLOTS, PROMPT, REQUESTS = 4, 16, 12
+
+
+def main():
+    cfg = get_smoke_config("gemma-2b")
+    tcfg = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                       remat=False, loss_chunk=64, attn_chunk_threshold=4096)
+    model = build_model(cfg, tcfg, ServeConfig(), tp=1)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # serving threadcomm: prefill and decode get their own MPIX streams
+    mesh = make_mesh((1,), ("ranks",))
+    root = threadcomm_init(mesh, process_axes=(), thread_axes=("ranks",))
+    root.start()
+
+    eng = ContinuousEngine(model, params, cache_len=64, num_slots=SLOTS,
+                           comm=root,
+                           scheduler=CellQueueScheduler(num_cells=8))
+    trace = make_trace(REQUESTS, prompt_len=PROMPT, max_new=(4, 24), seed=0)
+    reqs = []
+    for rid, entry in enumerate(trace):
+        batch = make_synthetic_batch(cfg, 1, PROMPT, seed=100 + rid,
+                                     compute_dtype="float32")
+        req = ServeRequest(rid=rid, batch={"tokens": np.asarray(batch["tokens"])},
+                           max_new_tokens=entry.max_new,
+                           arrival=entry.arrival)
+        reqs.append(req)
+        where = eng.submit(req, now=entry.arrival)
+        print(f" req {rid:2d} arrive {entry.arrival * 1e3:6.1f}ms "
+              f"max_new={entry.max_new:2d} -> {where}")
+
+    steps = 0
+    while not eng.idle:
+        done = eng.step(now=float(steps))
+        steps += 1
+        for r in done:
+            print(f"   finished req {r.rid:2d} after {r.generated:2d} "
+                  f"tokens (micro-step {steps}, live={eng.num_active})")
+    print(f" drained {len(reqs)} requests in {steps} micro-steps "
+          f"over {SLOTS} slots")
+
+    # greedy parity against the static baseline (same-arrival batch)
+    batch = make_synthetic_batch(cfg, SLOTS, PROMPT, compute_dtype="float32")
+    prompt = {"tokens": np.asarray(batch["tokens"])}
+    static = StaticEngine(model, params, cache_len=64).generate(prompt, 8)
+    cont = ContinuousEngine(model, params, cache_len=64,
+                            num_slots=SLOTS).generate(prompt, 8)
+    print(" parity vs StaticEngine:", bool(np.array_equal(static, cont)))
+
+    root.finish()
+    root.free()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -181,6 +181,30 @@ class CommStream:
         self._requests = []
         return out
 
+    def ordered(self, value):
+        """Thread an arbitrary pytree through this stream's program order:
+        ``value`` is gated on the stream's last recorded token and its first
+        leaf becomes the new tail. This is how non-collective work (e.g. the
+        serving engine's prefill inserts and decode micro-steps, DESIGN.md
+        §8) joins a stream's serialization context without going through
+        ``icollective`` — same MPIX-stream semantics, ordering *within* the
+        stream, none against other streams."""
+        self.comm._root._check_active()
+        leaves = jax.tree_util.tree_leaves(value)
+        if not leaves:
+            return value
+        if self._token is not None:
+            leaves = list(lax.optimization_barrier(
+                tuple(leaves) + (self._token,)))[:-1]
+            value = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(value), leaves)
+        # record a COPY of a 1-element slice: the caller may donate `value`
+        # into its next step (the serving engine does), which must not
+        # delete the stream tail — and the tail must not pin a full buffer
+        # (the prefill stream's first leaf is a whole KV page)
+        self._token = jnp.copy(leaves[0].ravel()[:1])
+        return value
+
 
 # ---------------------------------------------------------------------------
 # Derived-object handle (rank subsets) — kept from the MPIX group API

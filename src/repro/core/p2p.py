@@ -19,7 +19,7 @@ translate comm-local ranks and attach the request/stream semantics.
 
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 from jax import lax
@@ -29,14 +29,17 @@ from repro.core.collectives import Axes
 
 
 def send_recv(x, axes: Axes, pairs: Sequence[Tuple[int, int]], *,
-              force_protocol: str = None):
+              force_protocol: Optional[str] = None):
     """One message round over unified ranks. Returns (received, proto).
 
     Small payloads (≤ cell) are padded to the cell size — the eager protocol's
-    fixed-cell enqueue; large payloads go through unpadded (1-copy).
+    fixed-cell enqueue; large payloads go through unpadded (1-copy). An
+    unknown ``force_protocol`` raises :class:`ValueError` (it must never
+    silently fall through to the 1-copy branch).
     """
     nbytes = x.size * x.dtype.itemsize
-    proto = force_protocol or protocol.select_protocol(nbytes)
+    proto = (protocol.validate_protocol(force_protocol) if force_protocol
+             else protocol.select_protocol(nbytes))
     if proto in ("eager_fast", "eager"):
         cell_elems = max(1, protocol.DEFAULT_CELL_SIZE // x.dtype.itemsize)
         flat = x.reshape(-1)

@@ -19,11 +19,23 @@ structure of Fig. 3 and drives protocol selection in p2p.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 # thresholds from the paper's evaluation (§4.1)
 EAGER_THRESHOLD_INTERTHREAD = 4096      # bytes
 EAGER_THRESHOLD_INTERPROCESS = 16384    # bytes
 DEFAULT_CELL_SIZE = 4096                # shared-memory cell payload
+
+# every protocol name the model knows; anything else is a caller bug and
+# raises ValueError instead of silently taking the 1-copy branch
+PROTOCOLS = ("eager_fast", "eager", "one_copy", "rndv")
+
+
+def validate_protocol(name: str) -> str:
+    if name not in PROTOCOLS:
+        raise ValueError(
+            f"unknown protocol {name!r}; known protocols: {PROTOCOLS}")
+    return name
 
 
 @dataclass(frozen=True)
@@ -80,13 +92,13 @@ def select_protocol(nbytes: int, interthread: bool = True,
     return "eager" if nbytes <= EAGER_THRESHOLD_INTERPROCESS else "rndv"
 
 
-def request_overhead(nbytes: int, proto: str = None,
+def request_overhead(nbytes: int, proto: Optional[str] = None,
                      m: HostModel = HostModel()) -> float:
     """Request-object cost (seconds) of a nonblocking op under the paper's
     protocol: the eager fast path for single-cell messages SKIPS request
     allocation entirely (§3.2) — the small-message latency win that
     ``Comm.isend`` surfaces on its returned ``Request``."""
-    proto = proto or select_protocol(nbytes)
+    proto = validate_protocol(proto) if proto else select_protocol(nbytes)
     return 0.0 if proto == "eager_fast" else m.t_request
 
 

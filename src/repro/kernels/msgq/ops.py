@@ -7,7 +7,7 @@ bytes each protocol moves — the quantity behind the Fig.3 bandwidth curves.
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 
@@ -20,13 +20,14 @@ def _pad_to(x, m):
     return (jnp.pad(x, (0, pad)), pad)
 
 
-def msgq_copy(msg, *, force_protocol: str = None, cell_elems: int = 1024,
-              interpret: bool = True):
+def msgq_copy(msg, *, force_protocol: Optional[str] = None,
+              cell_elems: int = 1024, interpret: bool = True):
     """Copy a message through the selected protocol. msg: any shape."""
     flat = msg.reshape(-1)
     nbytes = flat.size * flat.dtype.itemsize
-    proto = force_protocol or protocol.select_protocol(
-        nbytes, cell=cell_elems * flat.dtype.itemsize)
+    proto = (protocol.validate_protocol(force_protocol) if force_protocol
+             else protocol.select_protocol(
+                 nbytes, cell=cell_elems * flat.dtype.itemsize))
     if proto in ("eager_fast", "eager"):
         padded, pad = _pad_to(flat, cell_elems)
         out = msgq.eager_copy(padded, cell_elems=cell_elems,

@@ -1,16 +1,27 @@
-"""Serving launcher: batched generation driver over the Engine.
+"""Serving traffic driver: arrival traces through the continuous-batching
+engine vs the static-batch baseline (DESIGN.md §8).
+
+Generates a Poisson/burst arrival trace, drives one or both engines over
+it in wall-clock time, and reports per-request latency percentiles plus
+useful-token throughput. With ``--json`` the measurements land in
+``BENCH_serve.json`` (the CI serving artifact), including a verified
+static-vs-continuous comparison row and a greedy parity check.
 
 CPU demo:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
-      --batch 4 --prompt-len 16 --max-new 32
-On hardware, drop --smoke and pass a mesh (the dry-run decode cells prove
-the production shardings lower; the Engine drives the same decode_step).
+      --engine both --requests 12 --slots 4 --prompt-len 16 \
+      --max-new-lo 4 --max-new-hi 32 --json BENCH_serve.json
+
+``benchmarks/bench_serve.py`` imports :func:`run_traffic` for the bench
+harness rows; this module stays the human-facing entry point.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from typing import Dict, List
 
 import jax
 import numpy as np
@@ -18,45 +29,234 @@ import numpy as np
 from repro.config import ServeConfig, TrainConfig
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.models.registry import build_model, make_synthetic_batch
-from repro.serve import Engine
+from repro.serve import (CellQueueScheduler, ContinuousEngine, ServeRequest,
+                         StaticEngine, make_trace)
+
+
+def useful_tokens(row: np.ndarray, eos_id: int) -> int:
+    """Tokens a request actually produced: up to and including the first
+    EOS (or the full row when EOS never fires / is disabled)."""
+    if eos_id >= 0:
+        hits = np.flatnonzero(row == eos_id)
+        if hits.size:
+            return int(hits[0]) + 1
+    return int(row.size)
+
+
+def requests_from_trace(cfg, trace, *, dtype: str = "float32",
+                        seed: int = 0) -> List[ServeRequest]:
+    """Materialize one ServeRequest per trace entry with a distinct
+    synthetic prompt (seeded per request id)."""
+    reqs = []
+    for rid, entry in enumerate(trace):
+        batch = make_synthetic_batch(cfg, 1, entry.prompt_len,
+                                     seed=seed + 1000 + rid,
+                                     compute_dtype=dtype)
+        prompt = {k: np.asarray(v) for k, v in batch.items() if k != "labels"}
+        reqs.append(ServeRequest(rid=rid, batch=prompt,
+                                 max_new_tokens=entry.max_new,
+                                 temperature=entry.temperature,
+                                 seed=seed, arrival=entry.arrival))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+def drive_continuous(eng: ContinuousEngine, requests: List[ServeRequest]
+                     ) -> Dict[str, float]:
+    """Wall-clock traffic loop: submit each request at its arrival time,
+    run serving micro-steps until everything drains."""
+    pending = sorted(requests, key=lambda r: r.arrival)
+    n, i = len(pending), 0
+    done = 0
+    t0 = time.perf_counter()
+    while done < n:
+        now = time.perf_counter() - t0
+        while i < n and pending[i].arrival <= now:
+            eng.submit(pending[i], now)
+            i += 1
+        if eng.idle and i < n:
+            time.sleep(min(1e-3, max(0.0, pending[i].arrival - now)))
+            continue
+        done += len(eng.step(time.perf_counter() - t0))
+    makespan = time.perf_counter() - t0
+    toks = sum(useful_tokens(r.output[:r.generated], eng.eos_id)
+               for r in requests)
+    stats = eng.scheduler.latency_stats()
+    stats.update(makespan_s=makespan, useful_tokens=float(toks),
+                 tok_s=toks / makespan,
+                 eager_admits=float(eng.scheduler.n_eager_admits),
+                 deferred=float(eng.scheduler.n_deferred),
+                 modeled_admit_cost_us=1e6
+                 * eng.scheduler.modeled_admit_cost_s)
+    return stats
+
+
+def drive_static(eng: StaticEngine, requests: List[ServeRequest],
+                 batch_size: int) -> Dict[str, float]:
+    """Static-batch baseline: wait for ``batch_size`` arrivals, prefill
+    them together, decode the whole batch to the slowest member. The last
+    partial batch is padded (repeat of its final row) so the jit shapes
+    stay fixed; padding rows are not counted."""
+    reqs = sorted(requests, key=lambda r: r.arrival)
+    n = len(reqs)
+    t0 = time.perf_counter()
+    for start in range(0, n, batch_size):
+        group = reqs[start:start + batch_size]
+        latest = max(r.arrival for r in group)
+        while time.perf_counter() - t0 < latest:
+            time.sleep(1e-3)
+        rows = [r.batch for r in group]
+        while len(rows) < batch_size:          # shape-stable padding
+            rows.append(rows[-1])
+        batch = {k: np.concatenate([row[k] for row in rows])
+                 for k in rows[0]}
+        max_new = max(r.max_new_tokens for r in group)
+        out = eng.generate(batch, max_new,
+                           temperature=group[0].temperature,
+                           seed=group[0].seed)
+        now = time.perf_counter() - t0
+        for j, r in enumerate(group):
+            r.output = out[j, :r.max_new_tokens].copy()
+            r.generated = useful_tokens(r.output, eng.eos_id)
+            r.finish_time = now
+    makespan = time.perf_counter() - t0
+    toks = sum(r.generated for r in reqs)
+    lat = np.array([r.finish_time - r.arrival for r in reqs])
+    return {"n": float(n), "makespan_s": makespan,
+            "useful_tokens": float(toks), "tok_s": toks / makespan,
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p95_s": float(np.percentile(lat, 95)),
+            "latency_mean_s": float(lat.mean())}
+
+
+# ---------------------------------------------------------------------------
+# End-to-end harness (imported by benchmarks/bench_serve.py)
+# ---------------------------------------------------------------------------
+
+def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
+                requests: int = 12, slots: int = 4, prompt_len: int = 16,
+                max_new=(4, 32), arrival: str = "poisson",
+                rate: float = 50.0, burst: int = 4, temperature: float = 0.0,
+                engine: str = "both", ring: bool = False, eos_id: int = -1,
+                seed: int = 0, parity_check: bool = True) -> Dict:
+    """Build the model once, warm the jits, then drive the trace through
+    the requested engine(s). Returns the full measurement dict."""
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    dtype = "float32" if smoke else "bfloat16"
+    tcfg = TrainConfig(param_dtype=dtype, compute_dtype=dtype, remat=False,
+                       loss_chunk=64, attn_chunk_threshold=4096)
+    scfg = ServeConfig(ring_buffer=ring)
+    model = build_model(cfg, tcfg, scfg, tp=1)
+    params = model.init(jax.random.PRNGKey(seed))
+    hi = max_new if isinstance(max_new, int) else max_new[1]
+    cache_len = (min(cfg.swa_window, prompt_len + hi)
+                 if ring and cfg.swa_window else prompt_len + hi)
+
+    trace = make_trace(requests, prompt_len=prompt_len, max_new=max_new,
+                       arrival=arrival, rate=rate, burst=burst,
+                       temperature=temperature, seed=seed)
+    result: Dict = {"arch": cfg.name, "requests": requests, "slots": slots,
+                    "prompt_len": prompt_len, "cache_len": cache_len,
+                    "arrival": arrival, "rate": rate, "eos_id": eos_id}
+
+    warm = {k: np.asarray(v) for k, v in make_synthetic_batch(
+        cfg, 1, prompt_len, seed=seed, compute_dtype=dtype).items()
+        if k != "labels"}
+
+    if engine in ("continuous", "both"):
+        ceng = ContinuousEngine(model, params, cache_len=cache_len,
+                                num_slots=slots, eos_id=eos_id)
+        # warm the prefill/decode jits off the clock, then reset accounting
+        ceng.generate({k: np.concatenate([v] * min(2, slots))
+                       for k, v in warm.items()}, 2)
+        ceng.scheduler = CellQueueScheduler(num_cells=4 * slots)
+        result["continuous"] = drive_continuous(
+            ceng, requests_from_trace(cfg, trace, dtype=dtype, seed=seed))
+
+    if engine in ("static", "both"):
+        seng = StaticEngine(model, params, cache_len=cache_len, eos_id=eos_id)
+        seng.generate({k: np.concatenate([v] * slots)
+                       for k, v in warm.items()}, 2)    # warm jits
+        result["static"] = drive_static(
+            seng, requests_from_trace(cfg, trace, dtype=dtype, seed=seed),
+            batch_size=slots)
+
+    if engine == "both":
+        spd = result["continuous"]["tok_s"] / result["static"]["tok_s"]
+        result["speedup_tok_s"] = spd
+        result["continuous_faster_verified"] = bool(spd > 1.0)
+
+    if parity_check:
+        B = min(4, slots)
+        pbatch = make_synthetic_batch(cfg, B, prompt_len, seed=seed + 1,
+                                      compute_dtype=dtype)
+        prompt = {k: np.asarray(v) for k, v in pbatch.items()
+                  if k != "labels"}
+        s_out = StaticEngine(model, params, cache_len=cache_len,
+                             eos_id=eos_id).generate(prompt, 8)
+        c_out = ContinuousEngine(model, params, cache_len=cache_len,
+                                 num_slots=B, eos_id=eos_id
+                                 ).generate(prompt, 8)
+        result["parity_token_identical"] = bool(np.array_equal(s_out, c_out))
+    return result
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(ARCH_NAMES))
+    ap.add_argument("--arch", default="gemma-2b", choices=list(ARCH_NAMES))
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", default="both",
+                    choices=["static", "continuous", "both"])
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--max-new-lo", type=int, default=4)
+    ap.add_argument("--max-new-hi", type=int, default=32)
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "burst", "all"])
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="arrival rate (req/s); burst spacing is 1/rate")
+    ap.add_argument("--burst", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=-1)
     ap.add_argument("--ring", action="store_true",
-                    help="ring-buffer KV (sub-quadratic archs)")
+                    help="ring-buffer KV slots (sub-quadratic archs)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write measurements (e.g. BENCH_serve.json)")
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    dtype = "float32" if args.smoke else "bfloat16"
-    tcfg = TrainConfig(param_dtype=dtype, compute_dtype=dtype, remat=False,
-                       loss_chunk=64, attn_chunk_threshold=4096)
-    scfg = ServeConfig(ring_buffer=args.ring)
-    model = build_model(cfg, tcfg, scfg, tp=1)
-    params = model.init(jax.random.PRNGKey(0))
-    cache_len = (min(cfg.swa_window, args.prompt_len + args.max_new)
-                 if args.ring and cfg.swa_window
-                 else args.prompt_len + args.max_new)
-    eng = Engine(model, params, cache_len=cache_len)
+    result = run_traffic(
+        args.arch, smoke=args.smoke, requests=args.requests,
+        slots=args.slots, prompt_len=args.prompt_len,
+        max_new=(args.max_new_lo, args.max_new_hi), arrival=args.arrival,
+        rate=args.rate, burst=args.burst, temperature=args.temperature,
+        engine=args.engine, ring=args.ring, eos_id=args.eos_id,
+        seed=args.seed)
 
-    batch = make_synthetic_batch(cfg, args.batch, args.prompt_len,
-                                 compute_dtype=dtype)
-    prompt = {k: v for k, v in batch.items() if k != "labels"}
-    t0 = time.time()
-    out = eng.generate(prompt, max_new_tokens=args.max_new,
-                       temperature=args.temperature)
-    dt = time.time() - t0
-    tput = args.batch * args.max_new / dt
-    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
-          f"cache_len={cache_len}")
-    print(f"generated {out.shape} in {dt:.2f}s  ({tput:.1f} tok/s host)")
-    print("sample tokens:", np.asarray(out[0][:16]).tolist())
+    print(f"arch={result['arch']} requests={result['requests']} "
+          f"slots={result['slots']} cache_len={result['cache_len']}")
+    for name in ("static", "continuous"):
+        if name in result:
+            m = result[name]
+            print(f"{name:>11}: {m['tok_s']:8.1f} tok/s  "
+                  f"makespan {m['makespan_s']:.2f}s  "
+                  f"p50 {m['latency_p50_s'] * 1e3:.0f}ms  "
+                  f"p95 {m['latency_p95_s'] * 1e3:.0f}ms")
+    if "speedup_tok_s" in result:
+        print(f"    speedup: {result['speedup_tok_s']:.2f}x "
+              f"(verified={result['continuous_faster_verified']})")
+    if "parity_token_identical" in result:
+        print(f"     parity: token_identical="
+              f"{result['parity_token_identical']}")
+    if args.json:
+        payload = {"schema": "repro-serve-bench-v1", **result}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,22 +1,69 @@
-"""Batched serving engine: prefill + greedy/temperature decode over the
-model bundle's cached decode_step.
+"""Serving engines: static batch (parity baseline) and continuous batching
+over the threadcomm substrate (DESIGN.md §8).
 
-Straightforward static-batch engine with per-sequence done-masking (EOS).
-The decode loop is a host loop over a jit'd step (donated cache) — at test
-scale this is the right trade-off; the dry-run cells lower the same
-``decode_step`` that this engine drives.
+``StaticEngine`` is the original fixed-batch path: prefill a whole batch,
+decode every row in lockstep until all are done. It stays as the parity
+and throughput baseline.
+
+``ContinuousEngine`` interleaves prefill and decode *micro-steps* over a
+fixed pool of KV slots (:mod:`repro.serve.kv_cache`): each host step
+admits up to ``max_prefill_per_step`` requests from the cell-queue
+scheduler (:mod:`repro.serve.scheduler`), prefills them one at a time
+into freed slots, then advances every live slot by one token. Decode over
+the pool is a single jit'd ``vmap`` of the model's ``decode_step`` with
+*per-slot* positions and donated buffers — each slot's state is fully
+independent (no shared mutable state across in-flight requests), which is
+the serving-side reading of the MPI+Threads lesson that accidental
+serialization, not concurrency itself, is what kills throughput.
+
+Threadcomm integration:
+
+* ``comm=`` binds the engine to a (sub-)communicator; prefill inserts and
+  decode steps are then threaded through two distinct ``CommStream``s
+  ("prefill" / "decode"), giving each domain explicit program order while
+  leaving the two free to overlap — the MPIX-stream discipline applied to
+  serving.
+* Data-parallel replica fan-out is ``Comm.split`` + ``shard_trace``: each
+  replica family runs its own engine over its slice of the traffic (see
+  ``tests/mp_cases.py::case_serve_replica_fanout``).
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.kv_cache import SlotKVCache
+from repro.serve.scheduler import CellQueueScheduler, ServeRequest
 
-class Engine:
+
+def _sample_rows(logits, keys, temps):
+    """Per-row sampling: greedy when temp <= 0, else temperature
+    categorical with that row's own PRNG key. logits (B, Vp)."""
+    greedy = jnp.argmax(logits, -1)
+    drawn = jax.vmap(
+        lambda l, k, t: jax.random.categorical(
+            k, l / jnp.maximum(t, 1e-6), -1))(logits, keys, temps)
+    return jnp.where(temps > 0.0, drawn, greedy).astype(jnp.int32)
+
+
+class _NullStream:
+    """Stand-in when no communicator is bound: no ordering constraints."""
+
+    def ordered(self, value):
+        return value
+
+
+# ---------------------------------------------------------------------------
+# Static batch (the original Engine; parity + throughput baseline)
+# ---------------------------------------------------------------------------
+
+class StaticEngine:
+    """Fixed-batch engine: one prefill, lockstep decode, done-masking."""
+
     def __init__(self, model, params, cache_len: int, eos_id: int = -1):
         self.model = model
         self.params = params
@@ -28,14 +75,17 @@ class Engine:
 
     def generate(self, batch, max_new_tokens: int, *,
                  temperature: float = 0.0, seed: int = 0) -> np.ndarray:
-        """batch: model input dict (prompt). Returns (B, max_new) tokens."""
+        """batch: model input dict (prompt). Returns (B, max_new) tokens.
+        Rows finished early emit ``eos_id``; an all-done batch exits the
+        loop (and the remaining columns are already eos-padded)."""
         logits, cache = self._prefill(self.params, batch)
         B = logits.shape[0]
         prompt_len = batch["tokens"].shape[1]
         if self.model.cfg.frontend == "patch_stub":
             prompt_len += self.model.cfg.num_frontend_tokens
         key = jax.random.PRNGKey(seed)
-        out = np.zeros((B, max_new_tokens), np.int32)
+        fill = self.eos_id if self.eos_id >= 0 else 0
+        out = np.full((B, max_new_tokens), fill, np.int32)
         done = np.zeros((B,), bool)
         tok = self._sample(logits, temperature, key)
         for t in range(max_new_tokens):
@@ -55,3 +105,200 @@ class Engine:
             return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
         return jax.random.categorical(
             key, logits / temperature, -1).astype(jnp.int32)[:, None]
+
+
+Engine = StaticEngine   # backwards-compatible alias
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching over the slot pool
+# ---------------------------------------------------------------------------
+
+class ContinuousEngine:
+    """Continuous-batching engine: slot-pool decode + cell-queue admission.
+
+    ``step(now)`` is one micro-step; drive it from a traffic loop (see
+    ``repro.launch.serve``) or use :meth:`generate` for the batch-API
+    convenience path (same-arrival batch, used by the parity tests).
+    """
+
+    def __init__(self, model, params, *, cache_len: int, num_slots: int,
+                 eos_id: int = -1, scheduler: Optional[CellQueueScheduler] = None,
+                 comm=None, max_prefill_per_step: int = 1):
+        self.model = model
+        self.params = params
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.max_prefill_per_step = max(1, int(max_prefill_per_step))
+        self.kv = SlotKVCache(model, cache_len, num_slots)
+        self.scheduler = scheduler or CellQueueScheduler(
+            num_cells=4 * num_slots)
+        if comm is not None:
+            self._prefill_stream = comm.stream("prefill")
+            self._decode_stream = comm.stream("decode")
+        else:
+            self._prefill_stream = _NullStream()
+            self._decode_stream = _NullStream()
+
+        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len))
+        self._decode = jax.jit(self._decode_impl(model),
+                               donate_argnums=(1, 2))
+        self._admit_state = jax.jit(self._admit_impl, donate_argnums=(0,))
+
+        # per-slot sampling/position state lives ON DEVICE and is updated
+        # inside the jits (donated) — the decode hot loop costs one
+        # dispatch + one small token sync per micro-step, no host↔device
+        # state shuttling
+        S = num_slots
+        self._state = {
+            "tok": jnp.zeros((S, 1, 1), jnp.int32),    # next input token
+            "pos": jnp.zeros((S,), jnp.int32),         # next decode position
+            "keys": jnp.zeros((S, 2), jnp.uint32),     # per-slot PRNG keys
+            "temp": jnp.zeros((S,), jnp.float32),
+        }
+        self._slot_req: List[Optional[ServeRequest]] = [None] * S
+        self._slot_out: List[Optional[np.ndarray]] = [None] * S
+
+    @staticmethod
+    def _decode_impl(model):
+        vstep = jax.vmap(model.decode_step, in_axes=(None, 0, 0, 0))
+
+        def fn(params, buf, state):
+            logits, buf = vstep(params, buf, state["tok"],
+                                state["pos"])            # logits (S, 1, Vp)
+            split = jax.vmap(jax.random.split)(state["keys"])  # (S, 2, 2)
+            nxt = _sample_rows(logits[:, 0, :], split[:, 1], state["temp"])
+            state = {"tok": nxt.reshape(-1, 1, 1),
+                     "pos": state["pos"] + 1,
+                     "keys": split[:, 0],
+                     "temp": state["temp"]}
+            return nxt, buf, state
+
+        return fn
+
+    @staticmethod
+    def _admit_impl(state, logits, slot, key, temp, pos0):
+        """Seed slot ``slot`` from the prefill logits: sample the first
+        token with the request's own key, install (tok, pos, key, temp)."""
+        key, sub = jax.random.split(key)
+        tok0 = _sample_rows(logits, sub[None], temp[None])[0]
+        state = {
+            "tok": state["tok"].at[slot].set(tok0),
+            "pos": state["pos"].at[slot].set(pos0),
+            "keys": state["keys"].at[slot].set(key),
+            "temp": state["temp"].at[slot].set(temp),
+        }
+        return state, tok0
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, req: ServeRequest, now: float = 0.0) -> str:
+        """Queue a request through the cell-queue scheduler."""
+        return self.scheduler.submit(req, now)
+
+    @property
+    def num_active(self) -> int:
+        return self.kv.num_live
+
+    @property
+    def idle(self) -> bool:
+        return self.kv.num_live == 0 and self.scheduler.num_waiting == 0
+
+    # -- micro-step --------------------------------------------------------
+    def step(self, now: float = 0.0) -> List[ServeRequest]:
+        """One serving micro-step: admit + prefill up to
+        ``max_prefill_per_step`` requests, then advance every live slot by
+        one token. Returns the requests that finished this step."""
+        finished: List[ServeRequest] = []
+        n_admit = min(self.kv.num_free, self.max_prefill_per_step)
+        for req in self.scheduler.admit(now, n_admit):
+            done = self._admit(req, now)
+            if done is not None:
+                finished.append(done)
+        if self.kv.num_live:
+            finished.extend(self._decode_micro_step(now))
+        return finished
+
+    def _admit(self, req: ServeRequest, now: float) -> Optional[ServeRequest]:
+        """Prefill one request into a freshly allocated slot. Returns the
+        request if it finished immediately (EOS on the first token /
+        max_new == 1), else None."""
+        batch = {k: jnp.asarray(v) for k, v in req.batch.items()}
+        logits, cache = self._prefill(self.params, batch)
+        cache = self._prefill_stream.ordered(cache)
+
+        slot = self.kv.alloc(req)
+        prompt_len = req.prompt_len
+        if self.model.cfg.frontend == "patch_stub":
+            prompt_len += self.model.cfg.num_frontend_tokens
+        self.kv.insert(slot, cache, length=prompt_len)
+
+        key = jax.random.fold_in(jax.random.PRNGKey(req.seed), req.rid)
+        self._state, tok0_dev = self._admit_state(
+            self._state, logits, jnp.int32(slot), key,
+            jnp.float32(req.temperature), jnp.int32(prompt_len))
+        tok0 = int(np.asarray(tok0_dev))
+        req.first_token_time = now
+        fill = self.eos_id if self.eos_id >= 0 else 0
+        out = np.full((req.max_new_tokens,), fill, np.int32)
+        out[0] = tok0
+        req.generated = 1
+        if (0 <= self.eos_id == tok0) or req.max_new_tokens == 1:
+            return self._finish(slot, req, out, now)
+
+        self._slot_req[slot] = req
+        self._slot_out[slot] = out
+        return None
+
+    def _decode_micro_step(self, now: float) -> List[ServeRequest]:
+        state = self._decode_stream.ordered(self._state)
+        nxt, buf, state = self._decode(self.params, self.kv.buffers, state)
+        self.kv.swap_buffers(buf)
+        self._state = state
+        nxt_np = np.asarray(nxt)        # the one host sync per micro-step
+
+        finished: List[ServeRequest] = []
+        for slot in self.kv.live_slots:
+            req = self._slot_req[slot]
+            t = int(nxt_np[slot])
+            out = self._slot_out[slot]
+            out[req.generated] = t
+            req.generated += 1
+            self.kv.advance(slot)
+            if (0 <= self.eos_id == t) \
+                    or req.generated >= req.max_new_tokens:
+                finished.append(self._finish(slot, req, out, now))
+                self._slot_req[slot] = None
+                self._slot_out[slot] = None
+        return finished
+
+    def _finish(self, slot: int, req: ServeRequest, out: np.ndarray,
+                now: float) -> ServeRequest:
+        req.output = out
+        self.kv.free(slot)
+        self.scheduler.record_finish(req, now)
+        return req
+
+    # -- batch-API convenience (parity with StaticEngine.generate) --------
+    def generate(self, batch, max_new_tokens: int, *,
+                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+        """Same-arrival batch through the continuous path: split the batch
+        into per-row requests, run micro-steps until drained, reassemble
+        (B, max_new) in row order."""
+        B = batch["tokens"].shape[0]
+        reqs = []
+        for i in range(B):
+            row = {k: np.asarray(v[i:i + 1]) for k, v in batch.items()}
+            req = ServeRequest(rid=i, batch=row,
+                               max_new_tokens=max_new_tokens,
+                               temperature=temperature, seed=seed)
+            reqs.append(req)
+            self.submit(req, 0.0)
+        steps = 0
+        limit = (B * (max_new_tokens + 2)) // max(1, self.kv.num_slots) \
+            + B * (max_new_tokens + 2)
+        while not self.idle:
+            self.step(0.0)
+            steps += 1
+            if steps > limit:
+                raise RuntimeError("continuous generate failed to drain")
+        return np.stack([r.output for r in reqs])

@@ -1,0 +1,136 @@
+"""Slot-pool paged KV cache for continuous batching (DESIGN.md §8).
+
+The decode state of every in-flight request lives in one stacked pytree of
+fixed-capacity *slots* — leading dim ``num_slots``, one per-request cache
+(batch=1, the model's own ``init_cache`` structure) per slot. Requests are
+admitted by allocating a slot and depositing their prefilled cache into it
+with a donation-safe in-place update; they retire by freeing the slot,
+whose buffers are simply overwritten by the next occupant.
+
+Design points (mirrors the paper's cell pool + *Lessons Learned on
+MPI+Threads*' independent-state rule):
+
+* **Fixed pool, O(1) alloc/free.** Slots are the bounded resource the
+  scheduler's cell queue admits against; there is no dynamic allocation on
+  the serving hot path.
+* **Per-slot independent state.** Each slot carries its own KV rows, SSM
+  state and position counter, so in-flight requests never serialize on
+  shared mutable state — decode over the pool is an embarrassingly
+  batched ``vmap`` over slots.
+* **Paged/ring recycling.** ``cache_len`` bounds the pages a slot holds;
+  for sub-quadratic archs the model layer recycles pages in place
+  (``pos % cache_len`` ring addressing), so a slot serves arbitrarily long
+  decodes at fixed footprint.
+* **Donation-safe updates.** Both the insert (``dynamic_update_slice`` at
+  the slot index) and the decode step donate the stacked buffers, so XLA
+  aliases them end-to-end — no full-pool copies per token.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+class SlotError(RuntimeError):
+    """Slot-pool misuse (double free, insert into a free slot, exhaustion)."""
+
+
+class SlotKVCache:
+    """Fixed pool of per-request decode-state slots over a stacked pytree."""
+
+    def __init__(self, model, cache_len: int, num_slots: int):
+        if num_slots < 1:
+            raise SlotError("need at least one slot")
+        self.model = model
+        self.cache_len = int(cache_len)
+        self.num_slots = int(num_slots)
+        proto = model.init_cache(1, cache_len)   # per-request (batch=1) cache
+        self._buf = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((num_slots,) + x.shape, x.dtype), proto)
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._owner: List[Optional[object]] = [None] * num_slots
+        # tokens resident per slot (prompt + generated); capped by cache_len
+        # only in the ring sense — the model recycles pages past capacity
+        self._len = np.zeros((num_slots,), np.int64)
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+    @staticmethod
+    def _insert_impl(buf, one, slot):
+        return jax.tree_util.tree_map(
+            lambda b, o: lax.dynamic_update_slice_in_dim(
+                b, o[None].astype(b.dtype), slot, axis=0), buf, one)
+
+    # -- pool management ---------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        return self.num_slots - len(self._free)
+
+    @property
+    def live_slots(self) -> List[int]:
+        return [s for s in range(self.num_slots) if self._owner[s] is not None]
+
+    def owner(self, slot: int):
+        return self._owner[slot]
+
+    def length(self, slot: int) -> int:
+        return int(self._len[slot])
+
+    @property
+    def lengths(self) -> np.ndarray:
+        return self._len.copy()
+
+    def alloc(self, owner: object) -> int:
+        """Claim a free slot for ``owner``. Raises on exhaustion — admission
+        control (the scheduler's cell queue) must gate on ``num_free``."""
+        if owner is None:
+            raise SlotError("slot owner must be non-None")
+        if not self._free:
+            raise SlotError("slot pool exhausted (admission must gate on "
+                            "num_free)")
+        slot = self._free.pop()
+        self._owner[slot] = owner
+        self._len[slot] = 0
+        return slot
+
+    def free(self, slot: int) -> None:
+        if self._owner[slot] is None:
+            raise SlotError(f"double free of slot {slot}")
+        self._owner[slot] = None
+        self._len[slot] = 0
+        self._free.append(slot)
+
+    # -- buffer access -----------------------------------------------------
+    @property
+    def buffers(self):
+        """The stacked cache pytree (leading dim = num_slots)."""
+        return self._buf
+
+    def swap_buffers(self, new_buf) -> None:
+        """Install the donated-output buffers after a decode step; the old
+        reference is dead (its storage was donated to the step)."""
+        self._buf = new_buf
+
+    def insert(self, slot: int, request_cache: Any, length: int) -> None:
+        """Deposit a prefilled per-request cache (batch=1 pytree) into
+        ``slot``. In-place on device (dynamic_update_slice over donated
+        buffers)."""
+        if self._owner[slot] is None:
+            raise SlotError(f"insert into free slot {slot}")
+        self._buf = self._insert(self._buf, request_cache, jnp.int32(slot))
+        self._len[slot] = int(length)
+
+    def advance(self, slot: int, n: int = 1) -> None:
+        """Account ``n`` more resident tokens in ``slot`` (one decode
+        micro-step appends one page entry, ring-recycled past capacity)."""
+        if self._owner[slot] is None:
+            raise SlotError(f"advance on free slot {slot}")
+        self._len[slot] += n

@@ -1,0 +1,250 @@
+"""Continuous-batching request scheduler: bounded cell-queue admission
+(paper §3.2 recast as serving admission control; DESIGN.md §8).
+
+The paper's interthread message queue is a *bounded pool of fixed-size
+cells*: small (eager) messages are buffered into cells immediately —
+sender proceeds without waiting for the receiver — while large messages
+follow the rendezvous discipline, handing the payload over only once the
+receiver has posted. We reuse that structure, and the protocol model's
+actual thresholds, as the serving admission queue:
+
+* a request's **prompt is its message** — ``nbytes = prompt tokens ×
+  itemsize``, classified by :func:`repro.core.protocol.select_protocol`;
+* **eager-class** prompts (≤ the interthread eager threshold) are admitted
+  into the bounded cell queue on submit, occupying ``ceil(nbytes/cell)``
+  cells — the request is "buffered" and its submitter unblocked;
+* **rendezvous-class** prompts (1-copy sized) are never buffered: they
+  wait in a deferral queue until a decode slot (the posted receive) is
+  free and every buffered request ahead of them has drained;
+* eager submissions that find the cell pool full overflow into the same
+  deferral discipline (bounded buffer — the queue cannot grow without
+  limit), and are promoted back into cells as cells free up.
+
+Admission priority is cells → overflow promotions → rendezvous, FIFO
+within each class; the cost model (`interthread_latency`) prices each
+admission for the accounting rows the traffic driver reports.
+
+Per-request arrival/admit/first-token/finish times are stamped on the
+:class:`ServeRequest` itself, so latency percentiles need no side tables.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import protocol
+
+#: scheduler classes mapped from the protocol model
+EAGER_CLASS = ("eager_fast", "eager")
+
+
+@dataclass
+class ServeRequest:
+    """One generation request plus its lifecycle accounting."""
+    rid: int
+    batch: Dict[str, np.ndarray]          # model inputs, leading dim 1
+    max_new_tokens: int
+    temperature: float = 0.0
+    seed: int = 0
+    arrival: float = 0.0                  # trace arrival time (seconds)
+
+    # -- stamped by the scheduler / engine --
+    protocol: str = ""
+    nbytes: int = 0
+    cells: int = 0
+    admit_cost_s: float = 0.0             # protocol-model admission price
+    submit_time: Optional[float] = None
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    output: Optional[np.ndarray] = None   # (max_new_tokens,) int32
+    generated: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.batch["tokens"].shape[1])
+
+    @property
+    def latency(self) -> float:
+        if self.finish_time is None:
+            raise ValueError(f"request {self.rid} not finished")
+        return self.finish_time - self.arrival
+
+    @property
+    def queue_delay(self) -> float:
+        if self.admit_time is None:
+            raise ValueError(f"request {self.rid} not admitted")
+        return self.admit_time - (self.submit_time
+                                  if self.submit_time is not None
+                                  else self.arrival)
+
+
+class CellQueueScheduler:
+    """Bounded cell-pool admission queue with rendezvous deferral."""
+
+    def __init__(self, num_cells: int = 16,
+                 cell_size: int = protocol.DEFAULT_CELL_SIZE,
+                 itemsize: int = 4):
+        if num_cells < 1:
+            raise ValueError("need at least one cell")
+        self.num_cells = int(num_cells)
+        self.cell_size = int(cell_size)
+        self.itemsize = int(itemsize)
+        self.cells_free = int(num_cells)
+        self._cellq: Deque[ServeRequest] = deque()      # buffered (eager)
+        self._overflow: Deque[ServeRequest] = deque()   # eager, pool full
+        self._rendezvous: Deque[ServeRequest] = deque() # 1-copy sized
+        self.finished: List[ServeRequest] = []
+        # counters for the driver's accounting rows
+        self.n_submitted = 0
+        self.n_eager_admits = 0       # buffered straight into cells
+        self.n_deferred = 0           # overflow + rendezvous submissions
+        self.modeled_admit_cost_s = 0.0
+
+    # -- classification ----------------------------------------------------
+    def _classify(self, req: ServeRequest, now: float) -> str:
+        req.submit_time = now
+        req.nbytes = int(req.batch["tokens"].size) * self.itemsize
+        req.protocol = protocol.select_protocol(
+            req.nbytes, interthread=True, cell=self.cell_size)
+        req.admit_cost_s = protocol.interthread_latency(req.nbytes)
+        req.cells = (max(1, math.ceil(req.nbytes / self.cell_size))
+                     if req.protocol in EAGER_CLASS else 0)
+        self.modeled_admit_cost_s += req.admit_cost_s
+        return req.protocol
+
+    # -- submission --------------------------------------------------------
+    def submit(self, req: ServeRequest, now: float = 0.0) -> str:
+        """Queue a request; returns the queue it landed in
+        (``"cells" | "overflow" | "rendezvous"``)."""
+        proto = self._classify(req, now)
+        self.n_submitted += 1
+        if proto in EAGER_CLASS and req.cells <= self.num_cells:
+            if req.cells <= self.cells_free:
+                self.cells_free -= req.cells
+                self._cellq.append(req)
+                self.n_eager_admits += 1
+                return "cells"
+            self._overflow.append(req)
+            self.n_deferred += 1
+            return "overflow"
+        # rendezvous discipline: 1-copy sized prompts, and eager prompts
+        # that could NEVER fit the cell pool even when empty (they must
+        # not wait in overflow for a promotion that cannot happen)
+        req.cells = 0
+        self._rendezvous.append(req)
+        self.n_deferred += 1
+        return "rendezvous"
+
+    def _promote(self) -> None:
+        """Refill freed cells from the overflow queue (FIFO)."""
+        while self._overflow and self._overflow[0].cells <= self.cells_free:
+            req = self._overflow.popleft()
+            self.cells_free -= req.cells
+            self._cellq.append(req)
+
+    # -- admission ---------------------------------------------------------
+    def admit(self, now: float, free_slots: int) -> List[ServeRequest]:
+        """Hand over up to ``free_slots`` requests for prefill, priority
+        cells → promoted overflow → rendezvous."""
+        out: List[ServeRequest] = []
+        while free_slots > 0:
+            if self._cellq:
+                req = self._cellq.popleft()
+                self.cells_free += req.cells
+                self._promote()
+            elif self._rendezvous:
+                req = self._rendezvous.popleft()
+            else:
+                break
+            req.admit_time = now
+            out.append(req)
+            free_slots -= 1
+        return out
+
+    # -- completion / stats ------------------------------------------------
+    def record_finish(self, req: ServeRequest, now: float) -> None:
+        req.finish_time = now
+        self.finished.append(req)
+
+    @property
+    def num_waiting(self) -> int:
+        return len(self._cellq) + len(self._overflow) + len(self._rendezvous)
+
+    def queue_depths(self) -> Dict[str, int]:
+        return {"cells": len(self._cellq), "overflow": len(self._overflow),
+                "rendezvous": len(self._rendezvous),
+                "cells_free": self.cells_free}
+
+    def latency_stats(self) -> Dict[str, float]:
+        """Percentiles over finished requests (seconds)."""
+        if not self.finished:
+            return {}
+        lat = np.array([r.latency for r in self.finished])
+        qd = np.array([r.queue_delay for r in self.finished])
+        toks = int(sum(r.generated for r in self.finished))
+        return {
+            "n": float(len(lat)),
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p95_s": float(np.percentile(lat, 95)),
+            "latency_mean_s": float(lat.mean()),
+            "queue_delay_p50_s": float(np.percentile(qd, 50)),
+            "queue_delay_p95_s": float(np.percentile(qd, 95)),
+            "tokens": float(toks),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Traffic traces + replica fan-out
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TraceEntry:
+    arrival: float
+    max_new: int
+    temperature: float = 0.0
+    prompt_len: int = 0
+
+
+def make_trace(n_requests: int, *, prompt_len: int, max_new,
+               arrival: str = "poisson", rate: float = 100.0,
+               burst: int = 4, temperature: float = 0.0,
+               seed: int = 0) -> List[TraceEntry]:
+    """Arrival trace: ``arrival`` is ``"poisson"`` (exponential gaps at
+    ``rate`` req/s), ``"burst"`` (groups of ``burst`` at 1/rate spacing)
+    or ``"all"`` (everything at t=0). ``max_new`` is an int or an
+    inclusive ``(lo, hi)`` range sampled per request."""
+    rng = np.random.default_rng(seed)
+    if arrival == "poisson":
+        gaps = rng.exponential(1.0 / rate, size=n_requests)
+        times = np.cumsum(gaps) - gaps[0]
+    elif arrival == "burst":
+        times = np.array([(i // burst) * (1.0 / rate)
+                          for i in range(n_requests)])
+    elif arrival == "all":
+        times = np.zeros(n_requests)
+    else:
+        raise ValueError(f"unknown arrival kind {arrival!r}")
+    if isinstance(max_new, int):
+        news = np.full(n_requests, max_new)
+    else:
+        lo, hi = max_new
+        news = rng.integers(lo, hi + 1, size=n_requests)
+    return [TraceEntry(arrival=float(times[i]), max_new=int(news[i]),
+                       temperature=temperature, prompt_len=prompt_len)
+            for i in range(n_requests)]
+
+
+def shard_trace(trace: List[TraceEntry], replica: int,
+                n_replicas: int) -> List[TraceEntry]:
+    """Round-robin data-parallel fan-out: the slice of the trace replica
+    ``replica`` of ``n_replicas`` serves (each replica is a ``Comm.split``
+    family of the serving threadcomm — DESIGN.md §8)."""
+    if not 0 <= replica < n_replicas:
+        raise ValueError(f"replica {replica} out of range({n_replicas})")
+    return [e for i, e in enumerate(trace) if i % n_replicas == replica]

@@ -635,6 +635,47 @@ def case_dryrun_smoke():
     print("CASE-OK")
 
 
+def case_serve_replica_fanout():
+    """Serving replica fan-out (DESIGN.md §8): data-parallel replicas are
+    ``Comm.split`` families over the unified rank space; each replica
+    serves its round-robin ``shard_trace`` slice, and replica-internal
+    collectives (token-budget allreduce) stay confined to the family."""
+    from repro.core import threadcomm_init
+    from repro.serve import make_trace, shard_trace
+
+    n, n_rep = 8, 2
+    mesh = _flat_mesh(n)
+    root = threadcomm_init(mesh, process_axes=(), thread_axes=("ranks",))
+    root.start()
+
+    trace = make_trace(12, prompt_len=8, max_new=(2, 6), seed=3)
+    shards = [shard_trace(trace, i, n_rep) for i in range(n_rep)]
+    # the fan-out partitions the traffic: disjoint, exhaustive, balanced
+    assert sum(len(s) for s in shards) == len(trace)
+    assert not {id(e) for e in shards[0]} & {id(e) for e in shards[1]}
+    assert abs(len(shards[0]) - len(shards[1])) <= 1
+
+    # replicas = contiguous half-blocks of the flat 8-rank axis: not an
+    # axis-aligned sub-grid, so split takes the merged-ring GroupComm path
+    color = [r * n_rep // n for r in range(n)]
+    rep = root.split(color)
+    assert len(rep.families()) == n_rep and rep.size == n // n_rep
+
+    # replica-internal token-budget allreduce: every rank of replica i must
+    # see replica i's total, with no leakage from the other replica
+    toks = [float(sum(e.max_new for e in s)) for s in shards]
+    per_rank = jnp.asarray([toks[color[r]] for r in range(n)],
+                           dtype=jnp.float32)
+    out = shard_map(lambda v: rep.allreduce(v), mesh=mesh,
+                    in_specs=P("ranks"), out_specs=P("ranks"))(per_rank)
+    expect = np.array([toks[color[r]] * (n // n_rep) for r in range(n)])
+    assert np.allclose(np.asarray(out), expect), (out, expect)
+
+    root.finish()
+    root.free()
+    print("CASE-OK")
+
+
 CASES = {k[5:]: v for k, v in list(globals().items())
          if k.startswith("case_")}
 

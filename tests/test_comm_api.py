@@ -28,6 +28,10 @@ def test_epoch_invalidation_across_finish():
     run_case("comm_epoch_invalidation", ndev=8)
 
 
+def test_serve_replica_fanout_split():
+    run_case("serve_replica_fanout", ndev=8)
+
+
 # ---------------------------------------------------------------------------
 # host-side lifecycle rules (single device, no shard_map)
 # ---------------------------------------------------------------------------

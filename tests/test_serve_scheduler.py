@@ -1,0 +1,164 @@
+"""Host-side serving substrate tests: cell-queue admission (paper §3.2 as
+admission control), slot-pool lifecycle, traces, and the protocol-name
+validation satellite (ValueError instead of silent 1-copy fallthrough)."""
+
+import numpy as np
+import pytest
+
+from repro.core import p2p, protocol
+from repro.serve import (CellQueueScheduler, ServeRequest, SlotError,
+                         SlotKVCache, make_trace, shard_trace)
+
+
+def _req(rid, prompt_len, max_new=8, arrival=0.0):
+    return ServeRequest(rid=rid,
+                        batch={"tokens": np.zeros((1, prompt_len), np.int32)},
+                        max_new_tokens=max_new, arrival=arrival)
+
+
+# ---------------------------------------------------------------------------
+# cell-queue scheduler
+# ---------------------------------------------------------------------------
+
+def test_eager_admission_within_cell_budget():
+    s = CellQueueScheduler(num_cells=4)
+    # 16-token prompt = 64 bytes -> single-cell eager_fast
+    assert s.submit(_req(0, 16), now=0.0) == "cells"
+    assert s.queue_depths()["cells"] == 1 and s.cells_free == 3
+    out = s.admit(now=1.0, free_slots=2)
+    assert [q.rid for q in out] == [0]
+    assert s.cells_free == 4
+    assert out[0].protocol == "eager_fast" and out[0].cells == 1
+    assert out[0].admit_time == 1.0 and out[0].submit_time == 0.0
+
+
+def test_multi_cell_eager_occupancy_and_overflow_promotion():
+    # cell_size=1024B -> 256 tokens/cell; 600-token prompt = 2400B:
+    # eager class (<= 4096B) but 3 cells
+    s = CellQueueScheduler(num_cells=4, cell_size=1024)
+    assert s.submit(_req(0, 600), 0.0) == "cells"
+    assert s.cells_free == 1
+    # next eager request needs 2 cells -> overflows (bounded pool)
+    assert s.submit(_req(1, 300), 0.0) == "overflow"
+    assert s.n_deferred == 1
+    # admitting rid 0 releases its cells and promotes rid 1 FIFO
+    out = s.admit(1.0, free_slots=1)
+    assert [q.rid for q in out] == [0]
+    assert s.queue_depths() == {"cells": 1, "overflow": 0, "rendezvous": 0,
+                                "cells_free": 2}
+    out = s.admit(2.0, free_slots=4)
+    assert [q.rid for q in out] == [1]
+
+
+def test_eager_request_larger_than_pool_takes_rendezvous_path():
+    """A prompt that could never fit the cell pool even when empty must
+    not starve in overflow — it follows the rendezvous discipline."""
+    s = CellQueueScheduler(num_cells=2, cell_size=1024)
+    # 800 tokens = 3200B: eager class, but needs 4 cells > pool of 2
+    assert s.submit(_req(0, 800), 0.0) == "rendezvous"
+    out = s.admit(1.0, free_slots=1)
+    assert [q.rid for q in out] == [0] and out[0].cells == 0
+
+
+def test_rendezvous_class_defers_until_slot_free():
+    s = CellQueueScheduler(num_cells=8)
+    # 2000-token prompt = 8000B > eager threshold -> rendezvous (1-copy)
+    assert s.submit(_req(0, 2000), 0.0) == "rendezvous"
+    assert s.submit(_req(1, 16), 0.0) == "cells"
+    # no slot free: nothing moves (the handshake waits for the receiver)
+    assert s.admit(1.0, free_slots=0) == []
+    # buffered (cell) requests drain ahead of rendezvous ones
+    out = s.admit(2.0, free_slots=2)
+    assert [q.rid for q in out] == [1, 0]
+    assert out[1].protocol == "one_copy" and out[1].cells == 0
+
+
+def test_fifo_within_class_and_accounting():
+    s = CellQueueScheduler(num_cells=16)
+    for i in range(4):
+        s.submit(_req(i, 16, arrival=float(i)), now=float(i))
+    out = s.admit(5.0, free_slots=4)
+    assert [q.rid for q in out] == [0, 1, 2, 3]
+    for q in out:
+        q.generated = 4
+        s.record_finish(q, now=6.0)
+    stats = s.latency_stats()
+    assert stats["n"] == 4.0 and stats["tokens"] == 16.0
+    assert stats["latency_p50_s"] == pytest.approx(6.0 - 1.5)
+    assert s.modeled_admit_cost_s > 0.0   # protocol cost model engaged
+
+
+# ---------------------------------------------------------------------------
+# slot pool
+# ---------------------------------------------------------------------------
+
+class _StubModel:
+    """Just enough of the Model bundle for SlotKVCache."""
+
+    @staticmethod
+    def init_cache(batch, cache_len, dtype=None):
+        import jax.numpy as jnp
+        return {"k": jnp.zeros((2, batch, cache_len, 1, 4), jnp.float32),
+                "pos": jnp.full((2, cache_len), -1, jnp.int32)}
+
+
+def test_slot_pool_alloc_free_lifecycle():
+    import jax.numpy as jnp
+    kv = SlotKVCache(_StubModel(), cache_len=8, num_slots=2)
+    a = kv.alloc("req-a")
+    b = kv.alloc("req-b")
+    assert {a, b} == {0, 1} and kv.num_free == 0
+    with pytest.raises(SlotError):
+        kv.alloc("req-c")               # exhaustion is an error, not a wait
+    one = _StubModel.init_cache(1, 8)
+    kv.insert(a, one, length=5)
+    kv.advance(a)
+    assert kv.length(a) == 6 and kv.owner(a) == "req-a"
+    kv.free(a)
+    with pytest.raises(SlotError):
+        kv.free(a)                      # double free
+    with pytest.raises(SlotError):
+        kv.insert(a, one, length=1)     # insert into freed slot
+    assert kv.num_free == 1 and kv.live_slots == [b]
+    # buffers keep the stacked leading slot dim
+    assert kv.buffers["k"].shape == (2, 2, 1, 8, 1, 4)
+
+
+# ---------------------------------------------------------------------------
+# traces + replica fan-out
+# ---------------------------------------------------------------------------
+
+def test_make_trace_kinds_and_shard():
+    tr = make_trace(8, prompt_len=16, max_new=(2, 6), arrival="poisson",
+                    rate=100.0, seed=0)
+    assert len(tr) == 8 and tr[0].arrival == 0.0
+    assert all(t2.arrival >= t1.arrival for t1, t2 in zip(tr, tr[1:]))
+    assert all(2 <= t.max_new <= 6 for t in tr)
+    tb = make_trace(8, prompt_len=16, max_new=4, arrival="burst", burst=4,
+                    rate=10.0)
+    assert tb[0].arrival == tb[3].arrival and tb[4].arrival > tb[3].arrival
+    with pytest.raises(ValueError):
+        make_trace(4, prompt_len=8, max_new=2, arrival="bogus")
+    s0, s1 = shard_trace(tr, 0, 2), shard_trace(tr, 1, 2)
+    assert len(s0) + len(s1) == len(tr)
+    assert not {id(e) for e in s0} & {id(e) for e in s1}
+    with pytest.raises(ValueError):
+        shard_trace(tr, 2, 2)
+
+
+# ---------------------------------------------------------------------------
+# protocol-name validation (satellite: no silent 1-copy fallthrough)
+# ---------------------------------------------------------------------------
+
+def test_unknown_protocol_rejected():
+    with pytest.raises(ValueError, match="unknown protocol"):
+        protocol.validate_protocol("two_copy")
+    with pytest.raises(ValueError, match="unknown protocol"):
+        protocol.request_overhead(64, proto="two_copy")
+    import jax.numpy as jnp
+    with pytest.raises(ValueError, match="unknown protocol"):
+        p2p.send_recv(jnp.zeros((4,)), "ranks", [(0, 0)],
+                      force_protocol="two_copy")
+    # known names still accepted by the model helpers
+    assert protocol.request_overhead(64, proto="eager_fast") == 0.0
+    assert protocol.request_overhead(64, proto="one_copy") > 0.0

@@ -1,11 +1,14 @@
-"""Serving bench: continuous batching vs static batch on a mixed-arrival
-trace (DESIGN.md §8), plus the greedy parity check.
+"""Serving bench: continuous batching vs static batch on a mixed-arrival,
+mixed-prompt-length trace (DESIGN.md §8), plus the greedy parity check
+and the chunked-vs-monolithic prefill comparison.
 
 Rows land in ``BENCH_serve.json`` via ``run.py --only serve --json ...``;
 the comparison rows carry ``verified=`` flags so the artifact records
 that the continuous engine's tok/s strictly exceeded the static engine's
-on the same trace, and that the two are token-identical on a same-arrival
-greedy batch.
+on the same trace, that chunked prefill beat monolithic prefill on TTFT
+p95 with its compile count independent of the number of distinct prompt
+lengths, and that chunked continuous decoding is token-identical to the
+static baseline on a same-arrival greedy batch (multi-chunk prompts).
 
 Runs in-process on the single CPU device (the engines are host loops over
 jit'd steps; no multi-device subprocess needed), so it is part of the
@@ -19,13 +22,17 @@ from typing import Iterator
 from benchmarks.common import Row
 
 # mixed-arrival trace tuned so decode compute (not arrival waiting)
-# dominates: static pays batch formation + decode-to-the-slowest tail
-TRACE = dict(requests=16, slots=4, prompt_len=16, max_new=(4, 48),
-             arrival="poisson", rate=400.0, seed=0)
+# dominates: static pays batch formation + decode-to-the-slowest tail.
+# prompt_len (16, 256) interleaves short and long prompts — the trace
+# that exposes prefill head-of-line blocking and per-length compiles
+TRACE = dict(requests=16, slots=4, prompt_len=(16, 256), max_new=(4, 48),
+             arrival="poisson", rate=400.0, seed=0,
+             prefill_chunk=64, max_prefill_per_step=2)
 # --fast: same shape of comparison, smaller trace (the bench-smoke CI job
 # runs every module fast; the dedicated serve-smoke job runs the full one)
-TRACE_FAST = dict(requests=8, slots=2, prompt_len=16, max_new=(2, 24),
-                  arrival="poisson", rate=400.0, seed=0)
+TRACE_FAST = dict(requests=8, slots=2, prompt_len=(16, 128), max_new=(2, 24),
+                  arrival="poisson", rate=400.0, seed=0,
+                  prefill_chunk=32, max_prefill_per_step=2)
 
 
 def rows(fast: bool = False) -> Iterator[Row]:
@@ -33,23 +40,41 @@ def rows(fast: bool = False) -> Iterator[Row]:
     res = run_traffic("gemma-2b", smoke=True, engine="both",
                       parity_check=True, **(TRACE_FAST if fast else TRACE))
 
-    for eng in ("static", "continuous"):
+    for eng in ("static", "continuous", "continuous_monolithic"):
+        if eng not in res:
+            continue
         m = res[eng]
         us_per_tok = 1e6 / m["tok_s"]
+        ttft = (f" ttft_p95_ms={m['ttft_p95_s']*1e3:.1f}"
+                if "ttft_p95_s" in m else "")
         yield (f"serve_{eng}_us_per_tok", us_per_tok,
                f"tok_s={m['tok_s']:.1f} p50_ms={m['latency_p50_s']*1e3:.1f} "
                f"p95_ms={m['latency_p95_s']*1e3:.1f} "
-               f"makespan_s={m['makespan_s']:.3f}")
+               f"makespan_s={m['makespan_s']:.3f}{ttft}")
 
     spd = res["speedup_tok_s"]
     yield ("serve_continuous_speedup", spd,
            f"continuous/static tok_s on {res['requests']}-req "
            f"{res['arrival']} trace; verified="
            f"{res['continuous_faster_verified']}")
+    if "ttft_p95_chunked_s" in res:
+        yield ("serve_chunked_ttft_p95_ms", res["ttft_p95_chunked_s"] * 1e3,
+               f"vs monolithic {res['ttft_p95_monolithic_s']*1e3:.1f}ms on "
+               f"prompt_len={res['prompt_len']}; verified="
+               f"{res['chunked_ttft_p95_improved']}")
+        yield ("serve_prefill_compiles",
+               res["continuous"]["prefill_compiles_total"],
+               f"chunked total (monolithic="
+               f"{res['continuous_monolithic']['prefill_compiles_total']:.0f} "
+               f"for {res['distinct_prompt_lens']} distinct prompt lens); "
+               f"prompt_len_independent="
+               f"{res['prefill_compiles_prompt_len_independent']}")
     yield ("serve_parity_greedy", 0.0,
            f"token_identical={res['parity_token_identical']} "
-           f"(ContinuousEngine vs StaticEngine, same-arrival batch)")
+           f"(chunked ContinuousEngine vs StaticEngine, same-arrival "
+           f"batch, prompt_len={res.get('parity_prompt_len')})")
     sched = res["continuous"]
     yield ("serve_admission_model_us", sched["modeled_admit_cost_us"],
            f"cell-queue eager_admits={int(sched['eager_admits'])} "
-           f"deferred={int(sched['deferred'])} (protocol §3.2 model)")
+           f"deferred={int(sched['deferred'])} (protocol §3.2 chunked "
+           f"handoff pricing)")

@@ -1,11 +1,15 @@
 """Continuous-batching serving demo against the threadcomm substrate.
 
-Requests stream in on a Poisson trace; the cell-queue scheduler admits
-them against the paper's bounded cell pool (eager buffering for small
-prompts, rendezvous deferral for large ones), the slot-pool KV cache
-recycles decode state across in-flight requests, and prefill/decode
-micro-steps are ordered on two distinct ``CommStream``s of a root
-threadcomm — the serving substrate of DESIGN.md §8 in ~60 lines.
+Requests stream in on a Poisson trace with mixed prompt lengths; the
+cell-queue scheduler admits them against the paper's bounded cell pool
+(eager buffering for small prompts, rendezvous deferral for large ones),
+prompts *stream into their slot in fixed-size chunks* interleaved with
+decode micro-steps (rendezvous-style chunked prefill — long prompts
+never stall in-flight decodes, and the chunk jit never recompiles for a
+new prompt length), the slot-pool KV cache recycles decode state across
+in-flight requests, and prefill/decode micro-steps are ordered on two
+distinct ``CommStream``s of a root threadcomm — the serving substrate of
+DESIGN.md §8 in ~60 lines.
 
 Run:  PYTHONPATH=src python examples/serve_continuous.py
 """
@@ -21,7 +25,7 @@ from repro.models.registry import build_model, make_synthetic_batch
 from repro.serve import (CellQueueScheduler, ContinuousEngine, ServeRequest,
                          StaticEngine, make_trace)
 
-SLOTS, PROMPT, REQUESTS = 4, 16, 12
+SLOTS, PROMPTS, REQUESTS, CHUNK = 4, (16, 48), 12, 16
 
 
 def main():
@@ -36,20 +40,23 @@ def main():
     root = threadcomm_init(mesh, process_axes=(), thread_axes=("ranks",))
     root.start()
 
-    eng = ContinuousEngine(model, params, cache_len=64, num_slots=SLOTS,
-                           comm=root,
-                           scheduler=CellQueueScheduler(num_cells=8))
-    trace = make_trace(REQUESTS, prompt_len=PROMPT, max_new=(4, 24), seed=0)
+    eng = ContinuousEngine(model, params, cache_len=80, num_slots=SLOTS,
+                           comm=root, prefill_chunk=CHUNK,
+                           max_prefill_per_step=2,
+                           scheduler=CellQueueScheduler(
+                               num_cells=8, prefill_chunk_bytes=4 * CHUNK))
+    trace = make_trace(REQUESTS, prompt_len=PROMPTS, max_new=(4, 24), seed=0)
     reqs = []
     for rid, entry in enumerate(trace):
-        batch = make_synthetic_batch(cfg, 1, PROMPT, seed=100 + rid,
-                                     compute_dtype="float32")
+        batch = make_synthetic_batch(cfg, 1, entry.prompt_len,
+                                     seed=100 + rid, compute_dtype="float32")
         req = ServeRequest(rid=rid, batch={"tokens": np.asarray(batch["tokens"])},
                            max_new_tokens=entry.max_new,
                            arrival=entry.arrival)
         reqs.append(req)
         where = eng.submit(req, now=entry.arrival)
         print(f" req {rid:2d} arrive {entry.arrival * 1e3:6.1f}ms "
+              f"prompt={entry.prompt_len:3d} "
               f"max_new={entry.max_new:2d} -> {where}")
 
     steps = 0
@@ -58,16 +65,21 @@ def main():
         steps += 1
         for r in done:
             print(f"   finished req {r.rid:2d} after {r.generated:2d} "
-                  f"tokens (micro-step {steps}, live={eng.num_active})")
-    print(f" drained {len(reqs)} requests in {steps} micro-steps "
-          f"over {SLOTS} slots")
+                  f"tokens, {r.prefill_chunks} prefill chunks "
+                  f"(micro-step {steps}, live={eng.num_active}, "
+                  f"prefilling={eng.num_prefilling})")
+    print(f" drained {len(reqs)} requests in {steps} micro-steps over "
+          f"{SLOTS} slots ({eng.prefill_compiles} prefill compile(s) for "
+          f"{len(set(PROMPTS))} prompt lengths)")
 
-    # greedy parity against the static baseline (same-arrival batch)
-    batch = make_synthetic_batch(cfg, SLOTS, PROMPT, compute_dtype="float32")
+    # greedy parity against the static baseline (same-arrival batch of
+    # the LONG prompts: a multi-chunk deposit, still token-identical)
+    batch = make_synthetic_batch(cfg, SLOTS, max(PROMPTS),
+                                 compute_dtype="float32")
     prompt = {"tokens": np.asarray(batch["tokens"])}
-    static = StaticEngine(model, params, cache_len=64).generate(prompt, 8)
-    cont = ContinuousEngine(model, params, cache_len=64,
-                            num_slots=SLOTS).generate(prompt, 8)
+    static = StaticEngine(model, params, cache_len=80).generate(prompt, 8)
+    cont = ContinuousEngine(model, params, cache_len=80, num_slots=SLOTS,
+                            prefill_chunk=CHUNK).generate(prompt, 8)
     print(" parity vs StaticEngine:", bool(np.array_equal(static, cont)))
 
     root.finish()

@@ -59,16 +59,46 @@ class TPUModel:
     vmem_cell: int = 64 * 1024    # VMEM staging cell
 
 
-def interthread_latency(nbytes: int, m: HostModel = HostModel()) -> float:
-    """Latency of one interthread message under the paper's protocol."""
-    if nbytes <= m.cell:
+def interthread_latency(nbytes: int, m: HostModel = HostModel(),
+                        proto: Optional[str] = None) -> float:
+    """Latency of one interthread message under the paper's protocol.
+
+    The protocol branch is derived from ``nbytes`` against the *model's
+    own* cell size (so pricing always agrees with ``select_protocol`` for
+    the same ``HostModel``); pass ``proto`` to price a forced protocol —
+    e.g. an eager-class message re-routed to the rendezvous discipline
+    because it could never fit the bounded cell pool.
+    """
+    if proto is None:
+        proto = select_protocol(nbytes, interthread=True, cell=m.cell)
+    else:
+        validate_protocol(proto)
+    if proto == "eager_fast":
         # eager fast path: request object skipped (paper's small-msg win)
         return m.t_envelope + 2 * nbytes / m.bw_copy
-    if nbytes <= EAGER_THRESHOLD_INTERTHREAD:
+    if proto == "eager":
         return m.t_envelope + m.t_request + 2 * nbytes / m.bw_copy
-    # 1-copy: handshake + a single copy, no address-mapping cost
+    # 1-copy / rndv: handshake + a single copy, no address-mapping cost
     return (m.t_envelope + m.t_request + m.t_handshake + m.t_map
             + nbytes / m.bw_copy)
+
+
+def chunked_handoff_latency(nbytes: int, chunk_bytes: int,
+                            m: HostModel = HostModel()) -> float:
+    """Rendezvous payload handed over incrementally in ``chunk_bytes``
+    pieces (paper §3.2: the sender deposits only as the receiver posts).
+
+    One handshake establishes the transfer, then every chunk pays an
+    envelope (the per-piece notify/ack) while the payload itself still
+    crosses exactly once. This is the admission price of a *chunked
+    prefill*: the prompt streams into its decode slot chunk-by-chunk,
+    interleaved with decode micro-steps, instead of one monolithic copy.
+    """
+    if chunk_bytes < 1:
+        raise ValueError("chunk_bytes must be >= 1")
+    nchunks = max(1, -(-nbytes // chunk_bytes))
+    return (m.t_envelope + m.t_request + m.t_handshake + m.t_map
+            + nchunks * m.t_envelope + nbytes / m.bw_copy)
 
 
 def interprocess_latency(nbytes: int, m: HostModel = HostModel()) -> float:

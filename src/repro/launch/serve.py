@@ -7,10 +7,18 @@ useful-token throughput. With ``--json`` the measurements land in
 ``BENCH_serve.json`` (the CI serving artifact), including a verified
 static-vs-continuous comparison row and a greedy parity check.
 
+The continuous engine runs its prompt deposits *chunked* (fixed-size
+chunk rows batched across requests, interleaved with decode micro-steps)
+and, for comparison, once more with monolithic prefill — the artifact
+records TTFT p50/p95 for both plus prefill compile counts on a
+mixed-prompt-length trace (chunked compiles are independent of the number
+of distinct prompt lengths; monolithic pays one XLA compile per length).
+
 CPU demo:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
-      --engine both --requests 12 --slots 4 --prompt-len 16 \
-      --max-new-lo 4 --max-new-hi 32 --json BENCH_serve.json
+      --engine both --requests 12 --slots 4 --prompt-len 16,256 \
+      --prefill-chunk 64 --max-new-lo 4 --max-new-hi 32 \
+      --json BENCH_serve.json
 
 ``benchmarks/bench_serve.py`` imports :func:`run_traffic` for the bench
 harness rows; this module stays the human-facing entry point.
@@ -29,8 +37,8 @@ import numpy as np
 from repro.config import ServeConfig, TrainConfig
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.models.registry import build_model, make_synthetic_batch
-from repro.serve import (CellQueueScheduler, ContinuousEngine, ServeRequest,
-                         StaticEngine, make_trace)
+from repro.serve import (ContinuousEngine, ServeRequest, StaticEngine,
+                         make_trace)
 
 
 def useful_tokens(row: np.ndarray, eos_id: int) -> int:
@@ -97,25 +105,42 @@ def drive_continuous(eng: ContinuousEngine, requests: List[ServeRequest]
 def drive_static(eng: StaticEngine, requests: List[ServeRequest],
                  batch_size: int) -> Dict[str, float]:
     """Static-batch baseline: wait for ``batch_size`` arrivals, prefill
-    them together, decode the whole batch to the slowest member. The last
-    partial batch is padded (repeat of its final row) so the jit shapes
-    stay fixed; padding rows are not counted."""
+    them together, decode the whole batch to the slowest member. Requests
+    are bucketed by prompt length (a static batch needs rectangular
+    prompts), batches form FIFO within a bucket and run in order of their
+    last member's arrival. The last partial batch is padded (repeat of
+    its final row) so the jit shapes stay fixed; padding rows are not
+    counted. Sampling is per-row — a mixed-temperature group samples each
+    request at its own temperature; heterogeneous seeds in one group
+    cannot be honored by the shared key chain and raise."""
     reqs = sorted(requests, key=lambda r: r.arrival)
     n = len(reqs)
+    buckets: Dict[int, List[ServeRequest]] = {}
+    for r in reqs:
+        buckets.setdefault(r.prompt_len, []).append(r)
+    groups = [rs[start:start + batch_size]
+              for rs in buckets.values()
+              for start in range(0, len(rs), batch_size)]
+    groups.sort(key=lambda g: max(r.arrival for r in g))
     t0 = time.perf_counter()
-    for start in range(0, n, batch_size):
-        group = reqs[start:start + batch_size]
+    for group in groups:
         latest = max(r.arrival for r in group)
         while time.perf_counter() - t0 < latest:
             time.sleep(1e-3)
+        seeds = {r.seed for r in group}
+        if len(seeds) > 1:
+            raise ValueError("drive_static: heterogeneous seeds in one "
+                             f"static batch group: {sorted(seeds)}")
         rows = [r.batch for r in group]
+        temps = [r.temperature for r in group]
         while len(rows) < batch_size:          # shape-stable padding
             rows.append(rows[-1])
+            temps.append(temps[-1])
         batch = {k: np.concatenate([row[k] for row in rows])
                  for k in rows[0]}
         max_new = max(r.max_new_tokens for r in group)
         out = eng.generate(batch, max_new,
-                           temperature=group[0].temperature,
+                           temperature=np.asarray(temps, np.float32),
                            seed=group[0].seed)
         now = time.perf_counter() - t0
         for j, r in enumerate(group):
@@ -137,13 +162,26 @@ def drive_static(eng: StaticEngine, requests: List[ServeRequest],
 # ---------------------------------------------------------------------------
 
 def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
-                requests: int = 12, slots: int = 4, prompt_len: int = 16,
+                requests: int = 12, slots: int = 4, prompt_len=16,
                 max_new=(4, 32), arrival: str = "poisson",
                 rate: float = 50.0, burst: int = 4, temperature: float = 0.0,
                 engine: str = "both", ring: bool = False, eos_id: int = -1,
-                seed: int = 0, parity_check: bool = True) -> Dict:
+                seed: int = 0, parity_check: bool = True,
+                prefill_chunk: int = 64, max_prefill_per_step: int = 2,
+                chunk_compare: bool = True) -> Dict:
     """Build the model once, warm the jits, then drive the trace through
-    the requested engine(s). Returns the full measurement dict."""
+    the requested engine(s). Returns the full measurement dict.
+
+    ``prompt_len`` is an int or a sequence cycled across the trace (e.g.
+    ``(16, 256)`` interleaves short and long prompts — the trace that
+    exposes prefill head-of-line blocking). With ``chunk_compare`` the
+    continuous engine runs twice, chunked (``prefill_chunk``) and
+    monolithic, and the result records the TTFT comparison plus prefill
+    compile counts. Warm-up compiles one prompt shape off the clock; the
+    monolithic engine must still compile every *other* distinct prompt
+    length mid-traffic, which is exactly the cost the chunked path
+    removes (its chunk jit never sees a new shape).
+    """
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     dtype = "float32" if smoke else "bfloat16"
     tcfg = TrainConfig(param_dtype=dtype, compute_dtype=dtype, remat=False,
@@ -151,30 +189,68 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
     scfg = ServeConfig(ring_buffer=ring)
     model = build_model(cfg, tcfg, scfg, tp=1)
     params = model.init(jax.random.PRNGKey(seed))
+    plens = ((int(prompt_len),) if isinstance(prompt_len, int)
+             else tuple(int(p) for p in prompt_len))
+    pmax = max(plens)
     hi = max_new if isinstance(max_new, int) else max_new[1]
-    cache_len = (min(cfg.swa_window, prompt_len + hi)
-                 if ring and cfg.swa_window else prompt_len + hi)
+    cache_len = (min(cfg.swa_window, pmax + hi)
+                 if ring and cfg.swa_window else pmax + hi)
 
-    trace = make_trace(requests, prompt_len=prompt_len, max_new=max_new,
+    trace = make_trace(requests, prompt_len=plens, max_new=max_new,
                        arrival=arrival, rate=rate, burst=burst,
                        temperature=temperature, seed=seed)
     result: Dict = {"arch": cfg.name, "requests": requests, "slots": slots,
-                    "prompt_len": prompt_len, "cache_len": cache_len,
-                    "arrival": arrival, "rate": rate, "eos_id": eos_id}
+                    "prompt_len": list(plens), "cache_len": cache_len,
+                    "arrival": arrival, "rate": rate, "eos_id": eos_id,
+                    "prefill_chunk": 0,     # effective value set below
+                    "max_prefill_per_step": max_prefill_per_step,
+                    "distinct_prompt_lens": len(set(plens))}
 
     warm = {k: np.asarray(v) for k, v in make_synthetic_batch(
-        cfg, 1, prompt_len, seed=seed, compute_dtype=dtype).items()
+        cfg, 1, plens[0], seed=seed, compute_dtype=dtype).items()
         if k != "labels"}
 
+    def _drive_continuous(chunk: int) -> Dict[str, float]:
+        # the engine's default scheduler prices admissions with the
+        # engine's own (cache_len-clamped) chunk size
+        eng = ContinuousEngine(
+            model, params, cache_len=cache_len, num_slots=slots,
+            eos_id=eos_id, prefill_chunk=chunk,
+            max_prefill_per_step=max_prefill_per_step)
+        # warm the jits on ONE prompt shape off the clock, then reset the
+        # engine — warm requests must leave neither stale device slot
+        # state nor accounting rows behind
+        eng.generate({k: np.concatenate([v] * min(2, slots))
+                      for k, v in warm.items()}, 2)
+        eng.reset()
+        warm_compiles = eng.prefill_compiles
+        stats = drive_continuous(
+            eng, requests_from_trace(cfg, trace, dtype=dtype, seed=seed))
+        stats["prefill_chunk"] = float(eng.prefill_chunk)
+        stats["prefill_compiles_total"] = float(eng.prefill_compiles)
+        stats["prefill_compiles_drive"] = float(
+            eng.prefill_compiles - warm_compiles)
+        return stats
+
     if engine in ("continuous", "both"):
-        ceng = ContinuousEngine(model, params, cache_len=cache_len,
-                                num_slots=slots, eos_id=eos_id)
-        # warm the prefill/decode jits off the clock, then reset accounting
-        ceng.generate({k: np.concatenate([v] * min(2, slots))
-                       for k, v in warm.items()}, 2)
-        ceng.scheduler = CellQueueScheduler(num_cells=4 * slots)
-        result["continuous"] = drive_continuous(
-            ceng, requests_from_trace(cfg, trace, dtype=dtype, seed=seed))
+        result["continuous"] = _drive_continuous(prefill_chunk)
+        # effective chunk size, read back from the engine (clamped to the
+        # slot capacity; 0 when the model family has no chunk step) — the
+        # artifact records real behavior, and a non-chunkable arch must
+        # not fake a chunked-vs-monolithic comparison of two identical
+        # monolithic runs
+        eff_chunk = int(result["continuous"]["prefill_chunk"])
+        result["prefill_chunk"] = eff_chunk
+        if eff_chunk and chunk_compare:
+            result["continuous_monolithic"] = _drive_continuous(0)
+            c, m = result["continuous"], result["continuous_monolithic"]
+            if "ttft_p95_s" in c and "ttft_p95_s" in m:
+                result["ttft_p95_chunked_s"] = c["ttft_p95_s"]
+                result["ttft_p95_monolithic_s"] = m["ttft_p95_s"]
+                result["chunked_ttft_p95_improved"] = bool(
+                    c["ttft_p95_s"] < m["ttft_p95_s"])
+            result["prefill_compiles_prompt_len_independent"] = bool(
+                c["prefill_compiles_total"] <= 1.0)
 
     if engine in ("static", "both"):
         seng = StaticEngine(model, params, cache_len=cache_len, eos_id=eos_id)
@@ -190,17 +266,22 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
         result["continuous_faster_verified"] = bool(spd > 1.0)
 
     if parity_check:
+        # parity at the LONGEST prompt length: a multi-chunk deposit must
+        # be token-identical to the monolithic static prefill
         B = min(4, slots)
-        pbatch = make_synthetic_batch(cfg, B, prompt_len, seed=seed + 1,
+        pbatch = make_synthetic_batch(cfg, B, pmax, seed=seed + 1,
                                       compute_dtype=dtype)
         prompt = {k: np.asarray(v) for k, v in pbatch.items()
                   if k != "labels"}
         s_out = StaticEngine(model, params, cache_len=cache_len,
                              eos_id=eos_id).generate(prompt, 8)
         c_out = ContinuousEngine(model, params, cache_len=cache_len,
-                                 num_slots=B, eos_id=eos_id
+                                 num_slots=B, eos_id=eos_id,
+                                 prefill_chunk=prefill_chunk,
+                                 max_prefill_per_step=max_prefill_per_step,
                                  ).generate(prompt, 8)
         result["parity_token_identical"] = bool(np.array_equal(s_out, c_out))
+        result["parity_prompt_len"] = pmax
     return result
 
 
@@ -212,7 +293,16 @@ def main():
                     choices=["static", "continuous", "both"])
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--prompt-len", default="16", metavar="N[,N...]",
+                    help="prompt length, or a comma list cycled across "
+                         "the trace (e.g. 16,256)")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="prompt chunk size for the continuous engine "
+                         "(0 = monolithic prefill)")
+    ap.add_argument("--max-prefill-per-step", type=int, default=2,
+                    help="chunk-rows batched into one prefill dispatch")
+    ap.add_argument("--no-chunk-compare", action="store_true",
+                    help="skip the monolithic-prefill comparison run")
     ap.add_argument("--max-new-lo", type=int, default=4)
     ap.add_argument("--max-new-hi", type=int, default=32)
     ap.add_argument("--arrival", default="poisson",
@@ -229,31 +319,48 @@ def main():
                     help="write measurements (e.g. BENCH_serve.json)")
     args = ap.parse_args()
 
+    plens = [int(x) for x in str(args.prompt_len).split(",") if x]
     result = run_traffic(
         args.arch, smoke=args.smoke, requests=args.requests,
-        slots=args.slots, prompt_len=args.prompt_len,
+        slots=args.slots, prompt_len=plens[0] if len(plens) == 1 else plens,
         max_new=(args.max_new_lo, args.max_new_hi), arrival=args.arrival,
         rate=args.rate, burst=args.burst, temperature=args.temperature,
         engine=args.engine, ring=args.ring, eos_id=args.eos_id,
-        seed=args.seed)
+        seed=args.seed, prefill_chunk=args.prefill_chunk,
+        max_prefill_per_step=args.max_prefill_per_step,
+        chunk_compare=not args.no_chunk_compare)
 
     print(f"arch={result['arch']} requests={result['requests']} "
-          f"slots={result['slots']} cache_len={result['cache_len']}")
-    for name in ("static", "continuous"):
+          f"slots={result['slots']} cache_len={result['cache_len']} "
+          f"prompt_len={result['prompt_len']} "
+          f"prefill_chunk={result['prefill_chunk']}")
+    for name in ("static", "continuous_monolithic", "continuous"):
         if name in result:
             m = result[name]
-            print(f"{name:>11}: {m['tok_s']:8.1f} tok/s  "
+            ttft = (f"  ttft_p95 {m['ttft_p95_s'] * 1e3:.0f}ms"
+                    if "ttft_p95_s" in m else "")
+            compiles = (f"  prefill_compiles {m['prefill_compiles_total']:.0f}"
+                        if "prefill_compiles_total" in m else "")
+            print(f"{name:>21}: {m['tok_s']:8.1f} tok/s  "
                   f"makespan {m['makespan_s']:.2f}s  "
                   f"p50 {m['latency_p50_s'] * 1e3:.0f}ms  "
-                  f"p95 {m['latency_p95_s'] * 1e3:.0f}ms")
+                  f"p95 {m['latency_p95_s'] * 1e3:.0f}ms"
+                  f"{ttft}{compiles}")
     if "speedup_tok_s" in result:
         print(f"    speedup: {result['speedup_tok_s']:.2f}x "
               f"(verified={result['continuous_faster_verified']})")
+    if "chunked_ttft_p95_improved" in result:
+        print(f"    chunked ttft_p95 {result['ttft_p95_chunked_s']*1e3:.0f}ms"
+              f" vs monolithic {result['ttft_p95_monolithic_s']*1e3:.0f}ms "
+              f"(improved={result['chunked_ttft_p95_improved']}, "
+              f"compile-count prompt-len independent="
+              f"{result.get('prefill_compiles_prompt_len_independent')})")
     if "parity_token_identical" in result:
         print(f"     parity: token_identical="
-              f"{result['parity_token_identical']}")
+              f"{result['parity_token_identical']} "
+              f"(prompt_len={result.get('parity_prompt_len')})")
     if args.json:
-        payload = {"schema": "repro-serve-bench-v1", **result}
+        payload = {"schema": "repro-serve-bench-v2", **result}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"wrote {args.json}")

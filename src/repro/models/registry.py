@@ -13,7 +13,8 @@ from typing import Any, Callable, Dict, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig, ShapeConfig, TrainConfig, ServeConfig
+from repro.config import (BLOCK_DENSE, ModelConfig, ShapeConfig,
+                          TrainConfig, ServeConfig)
 from repro.models import encdec, transformer
 from repro.models.layers import dtype_of
 
@@ -27,6 +28,10 @@ class Model(NamedTuple):
     init_cache: Callable[..., Any]
     knobs: Dict[str, Any]
     tp: int
+    # fixed-shape incremental prefill (chunked prompt deposit) — None for
+    # families that must prefill monolithically (SSM/hybrid state threading,
+    # modality frontends, encoder-decoder)
+    prefill_chunk: Any = None
 
 
 def _knobs(train: TrainConfig, serve: ServeConfig,
@@ -67,6 +72,11 @@ def build_model(cfg: ModelConfig, train: TrainConfig = None,
             knobs=knobs, tp=tp)
 
     init = lambda key: transformer.init_lm_params(cfg, key, pdt)
+    # dense attention only: MoE's capacity-limited routing is grouped over
+    # the routed sequence, so per-chunk routing (and padded rows competing
+    # for expert capacity) would not be token-identical to monolithic
+    # prefill; SSM/hybrid need state threading; frontends prepend tokens
+    chunkable = cfg.block == BLOCK_DENSE and cfg.frontend == "none"
     return Model(
         cfg=cfg,
         init=init,
@@ -76,7 +86,9 @@ def build_model(cfg: ModelConfig, train: TrainConfig = None,
         init_cache=lambda batch, cache_len, dtype=None: (
             transformer.init_cache(cfg, batch, cache_len, tp,
                                    dtype or dtype_of(knobs["compute_dtype"]))),
-        knobs=knobs, tp=tp)
+        knobs=knobs, tp=tp,
+        prefill_chunk=(transformer.make_prefill_chunk(cfg, knobs, tp)
+                       if chunkable else None))
 
 
 # ---------------------------------------------------------------------------

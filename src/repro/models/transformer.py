@@ -335,40 +335,59 @@ def make_prefill(cfg: ModelConfig, knobs, tp: int):
     return prefill
 
 
-def _decode_attn(cfg, p, xn, layer_cache, pos, is_global, tp):
-    """One-token attention against the cache. xn (B,1,d)."""
+def _cached_attn(cfg, p, xn, layer_cache, qpos, wslot, is_global):
+    """Attention for query tokens against (and into) the cache — the
+    shared core of single-token decode and chunked prefill.
+
+    xn (B,C,d); layer_cache k/v (B,W,Gs,hd), pos (W,); ``qpos`` (C,) the
+    queries' absolute positions, ``wslot`` (C,) the cache slot each query
+    writes its k/v/pos to. The writes are drop-mode scatters: aiming a
+    query at the out-of-range slot ``W`` (parked decode rows, chunk
+    padding) writes *nothing*, which is what lets a continuous-batching
+    engine run the decode vmap over its whole slot pool while some slots
+    are free or still mid-chunked-prefill. Queries then attend over the
+    whole updated cache, causally masked on the stored absolute
+    positions — earlier chunks of the same prompt are just cache entries.
+    """
     B = xn.shape[0]
-    W = layer_cache["k"].shape[1]  # (B, W, Gs, hd)
+    C = xn.shape[1]
+    W = layer_cache["k"].shape[1]
     gs = layer_cache["k"].shape[2]
-    positions = jnp.full((1,), pos)
-    q, k, v = L.project_qkv(p, xn, cfg, positions,
-                            kv_positions=positions)
+    q, k, v = L.project_qkv(p, xn, cfg, qpos)
     kc = L.repeat_kv(k, gs)
     vc = L.repeat_kv(v, gs)
-    slot = pos % W
-    new_k = lax.dynamic_update_slice_in_dim(layer_cache["k"], kc, slot, axis=1)
-    new_v = lax.dynamic_update_slice_in_dim(layer_cache["v"], vc, slot, axis=1)
-    new_pos = lax.dynamic_update_slice_in_dim(
-        layer_cache["pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0)
+    new_k = layer_cache["k"].at[:, wslot].set(kc, mode="drop")
+    new_v = layer_cache["v"].at[:, wslot].set(vc, mode="drop")
+    new_pos = layer_cache["pos"].at[wslot].set(
+        qpos.astype(jnp.int32), mode="drop")
 
-    # grouped attention: q (B,1,Gs,R,hd) x cache (B,W,Gs,hd)
+    # grouped attention: q (B,C,Gs,R,hd) x cache (B,W,Gs,hd)
     R = cfg.num_heads // gs
-    qg = q.reshape(B, 1, gs, R, cfg.head_dim)
+    qg = q.reshape(B, C, gs, R, cfg.head_dim)
     s = jnp.einsum("bqgrk,btgk->bgrqt", qg, new_k).astype(jnp.float32)
     s = s / math.sqrt(cfg.head_dim)
     if cfg.logit_softcap > 0:
         s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
     kpos = new_pos  # (W,)
-    okay = (kpos >= 0) & (kpos <= pos)
+    okay = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])  # (C, W)
     if cfg.swa_window > 0:
-        win_ok = kpos > pos - cfg.swa_window
+        win_ok = kpos[None, :] > qpos[:, None] - cfg.swa_window
         okay = okay & jnp.where(is_global, True, win_ok)
-    s = s + jnp.where(okay, 0.0, L.NEG_INF)[None, None, None, None, :]
+    s = s + jnp.where(okay, 0.0, L.NEG_INF)[None, None, None, :, :]
     prob = jax.nn.softmax(s, axis=-1).astype(xn.dtype)
     ctx = jnp.einsum("bgrqt,btgk->bqgrk", prob, new_v)
-    ctx = ctx.reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    ctx = ctx.reshape(B, C, cfg.num_heads, cfg.head_dim)
     out = L.attn_output(p, ctx, xn.dtype)
     return out, {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+def _decode_attn(cfg, p, xn, layer_cache, pos, is_global, tp):
+    """One-token attention against the cache: the C=1 case of
+    :func:`_cached_attn`. A negative (parked) ``pos`` writes nothing."""
+    qpos = jnp.full((1,), pos)
+    wslot = jnp.where(qpos >= 0, qpos % layer_cache["k"].shape[1],
+                      layer_cache["k"].shape[1])
+    return _cached_attn(cfg, p, xn, layer_cache, qpos, wslot, is_global)
 
 
 def make_decode_step(cfg: ModelConfig, knobs, tp: int):
@@ -443,3 +462,85 @@ def make_decode_step(cfg: ModelConfig, knobs, tp: int):
         return jnp.where(vocab_ok, logits, L.NEG_INF), new_cache
 
     return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (fixed-shape prompt deposit for continuous serving)
+# ---------------------------------------------------------------------------
+
+def _chunk_attn(cfg, p, xn, layer_cache, qpos, valid, is_global):
+    """Attention for a prompt chunk against (and into) the cache:
+    :func:`_cached_attn` with invalid (padding) positions aimed at the
+    drop slot ``W`` — they write no cache pages and, never becoming valid
+    cache entries, draw no attention weight from valid queries."""
+    W = layer_cache["k"].shape[1]
+    wslot = jnp.where(valid, qpos % W, W)
+    return _cached_attn(cfg, p, xn, layer_cache, qpos, wslot, is_global)
+
+
+def make_prefill_chunk(cfg: ModelConfig, knobs, tp: int):
+    """Fixed-shape incremental prefill: deposit ``C`` prompt tokens into a
+    per-request cache starting at position ``pos0``.
+
+    Unlike :func:`make_prefill` (whose jit shape — and therefore XLA
+    compile — depends on the prompt length), this step is always traced at
+    the chunk shape, so serving compiles O(1) programs however many
+    distinct prompt lengths the traffic carries. The last (partial) chunk
+    is padded to ``C`` and masked via ``n_valid``: padding positions never
+    write cache entries and never receive attention weight from valid
+    queries. Returns the logits at the last *valid* position (only
+    meaningful on the final chunk of a prompt) plus the updated cache.
+
+    Supported for decoder-only *dense* attention blocks without a
+    modality frontend. MoE routing is capacity-limited over the routed
+    group, so per-chunk routing (with padded rows competing for expert
+    capacity) would not be token-identical to monolithic prefill;
+    SSM/hybrid blocks need state threading and frontends prepend tokens —
+    all of those stay on the monolithic prefill path (the registry
+    exposes ``prefill_chunk=None`` for them).
+    """
+    compute_dtype = L.dtype_of(knobs["compute_dtype"])
+    flags = layer_flags(cfg)
+
+    def prefill_chunk(params, cache, tokens, pos0, n_valid):
+        """tokens (C,) int32, pos0/n_valid scalar int32, cache a
+        per-request (batch=1) pytree -> (logits (Vp,), cache)."""
+        C = tokens.shape[0]
+        x = embed_tokens(cfg, params, tokens[None], compute_dtype)  # (1,C,d)
+        qpos = pos0 + jnp.arange(C)
+        valid = jnp.arange(C) < n_valid
+
+        def layer_slice(tree, idx):
+            return jax.tree_util.tree_map(
+                lambda c: lax.dynamic_index_in_dim(c, idx, 0, keepdims=False),
+                tree)
+
+        def layer_put(tree, new, idx):
+            return jax.tree_util.tree_map(
+                lambda c, n: lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), idx, 0), tree, new)
+
+        def body(carry, xs):
+            h, cch = carry
+            p_l, flag, idx = xs
+            cache_l = layer_slice(cch, idx)
+            xn = L.apply_norm(h, p_l["ln1"], cfg)
+            a_out, a_cache = _chunk_attn(cfg, p_l["attn"], xn, cache_l,
+                                         qpos, valid, flag)
+            h = h + a_out
+            h = h + L.mlp_apply(p_l["mlp"],
+                                L.apply_norm(h, p_l["ln2"], cfg), cfg)
+            return (h, layer_put(cch, a_cache, idx)), None
+
+        (x, new_cache), _ = lax.scan(
+            body, (x, cache),
+            (params["blocks"], flags, jnp.arange(cfg.num_layers)))
+        x = L.apply_norm(x, params["final_norm"], cfg)
+        last = jnp.clip(n_valid - 1, 0, C - 1)
+        hidden = jnp.take(x[0], last, axis=0)                   # (d,)
+        w_out = lm_head_weight(cfg, params).astype(compute_dtype)
+        logits = (hidden @ w_out).astype(jnp.float32)
+        vocab_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        return jnp.where(vocab_ok, logits, L.NEG_INF), new_cache
+
+    return prefill_chunk

@@ -7,14 +7,28 @@ and throughput baseline.
 
 ``ContinuousEngine`` interleaves prefill and decode *micro-steps* over a
 fixed pool of KV slots (:mod:`repro.serve.kv_cache`): each host step
-admits up to ``max_prefill_per_step`` requests from the cell-queue
-scheduler (:mod:`repro.serve.scheduler`), prefills them one at a time
-into freed slots, then advances every live slot by one token. Decode over
-the pool is a single jit'd ``vmap`` of the model's ``decode_step`` with
-*per-slot* positions and donated buffers — each slot's state is fully
-independent (no shared mutable state across in-flight requests), which is
-the serving-side reading of the MPI+Threads lesson that accidental
-serialization, not concurrency itself, is what kills throughput.
+admits requests from the cell-queue scheduler
+(:mod:`repro.serve.scheduler`), deposits their prompts, then advances
+every live slot by one token. Decode over the pool is a single jit'd
+``vmap`` of the model's ``decode_step`` with *per-slot* positions and
+donated buffers — each slot's state is fully independent (no shared
+mutable state across in-flight requests), which is the serving-side
+reading of the MPI+Threads lesson that accidental serialization, not
+concurrency itself, is what kills throughput.
+
+Prompt deposit follows the paper's rendezvous discipline, chunked
+(DESIGN.md §8): with ``prefill_chunk > 0`` (and a model exposing
+``prefill_chunk``) prompts stream into their slot in fixed-size chunks —
+up to ``max_prefill_per_step`` chunk-rows from *different* requests are
+batched into one fused dispatch per micro-step, interleaved with decode.
+A long prompt therefore never monopolizes the device between two decode
+steps (no prefill head-of-line blocking), and because the chunk jit's
+shapes never change, prefill compiles O(1) XLA programs however many
+distinct prompt lengths the traffic carries — versus one compile per
+distinct length on the monolithic path (``prefill_chunk=0``), which
+stays available as the baseline and as the fallback for model families
+without a parity-safe chunk step (SSM/hybrid state, capacity-limited
+MoE routing, modality frontends, enc-dec).
 
 Threadcomm integration:
 
@@ -30,7 +44,9 @@ Threadcomm integration:
 
 from __future__ import annotations
 
-from typing import List, Optional
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -74,20 +90,31 @@ class StaticEngine:
         self._step = jax.jit(model.decode_step, donate_argnums=(1,))
 
     def generate(self, batch, max_new_tokens: int, *,
-                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+                 temperature=0.0, seed: int = 0) -> np.ndarray:
         """batch: model input dict (prompt). Returns (B, max_new) tokens.
         Rows finished early emit ``eos_id``; an all-done batch exits the
-        loop (and the remaining columns are already eos-padded)."""
+        loop (and the remaining columns are already eos-padded).
+
+        ``temperature`` is a scalar or a per-row (B,) vector — a mixed
+        batch samples each row at its own temperature (per-row split
+        keys) instead of silently applying one row's temperature to all.
+        """
         logits, cache = self._prefill(self.params, batch)
         B = logits.shape[0]
         prompt_len = batch["tokens"].shape[1]
         if self.model.cfg.frontend == "patch_stub":
             prompt_len += self.model.cfg.num_frontend_tokens
+        temps = np.asarray(temperature, np.float32)
+        if temps.ndim == 0:
+            temps = np.full((B,), float(temps), np.float32)
+        elif temps.shape != (B,):
+            raise ValueError(f"temperature must be scalar or ({B},), got "
+                             f"shape {temps.shape}")
         key = jax.random.PRNGKey(seed)
         fill = self.eos_id if self.eos_id >= 0 else 0
         out = np.full((B, max_new_tokens), fill, np.int32)
         done = np.zeros((B,), bool)
-        tok = self._sample(logits, temperature, key)
+        tok = self._sample(logits, temps, key)
         for t in range(max_new_tokens):
             out[:, t] = np.where(done, self.eos_id, np.asarray(tok)[:, 0])
             if self.eos_id >= 0:
@@ -97,14 +124,14 @@ class StaticEngine:
             pos = jnp.int32(prompt_len + t)
             logits, cache = self._step(self.params, cache, tok, pos)
             key, sub = jax.random.split(key)
-            tok = self._sample(logits, temperature, sub)
+            tok = self._sample(logits, temps, sub)
         return out
 
-    def _sample(self, logits, temperature: float, key):
-        if temperature <= 0.0:
+    def _sample(self, logits, temps: np.ndarray, key):
+        if (temps <= 0.0).all():
             return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        return jax.random.categorical(
-            key, logits / temperature, -1).astype(jnp.int32)[:, None]
+        keys = jax.random.split(key, logits.shape[0])
+        return _sample_rows(logits, keys, jnp.asarray(temps))[:, None]
 
 
 Engine = StaticEngine   # backwards-compatible alias
@@ -114,8 +141,26 @@ Engine = StaticEngine   # backwards-compatible alias
 # Continuous batching over the slot pool
 # ---------------------------------------------------------------------------
 
+#: parked per-slot decode position: so far below zero that the drop-mode
+#: cache writes in ``decode_step`` discard everything a free or
+#: still-prefilling slot's vmap row produces
+PARK_POS = -(2 ** 30)
+
+
+@dataclass(eq=False)      # identity equality: deque.remove must never
+class _PrefillJob:        # field-compare requests (ndarray __eq__ raises)
+    """A partially-deposited prompt: the engine streams ``tokens`` into
+    ``slot`` chunk by chunk (``off`` tokens landed so far)."""
+    req: ServeRequest
+    slot: int
+    tokens: np.ndarray            # (prompt_len,) int32
+    key: jax.Array                # per-request PRNG key (fold_in(rid))
+    off: int = 0
+
+
 class ContinuousEngine:
-    """Continuous-batching engine: slot-pool decode + cell-queue admission.
+    """Continuous-batching engine: slot-pool decode + cell-queue admission
+    + chunked, batched prefill.
 
     ``step(now)`` is one micro-step; drive it from a traffic loop (see
     ``repro.launch.serve``) or use :meth:`generate` for the batch-API
@@ -124,15 +169,24 @@ class ContinuousEngine:
 
     def __init__(self, model, params, *, cache_len: int, num_slots: int,
                  eos_id: int = -1, scheduler: Optional[CellQueueScheduler] = None,
-                 comm=None, max_prefill_per_step: int = 1):
+                 comm=None, max_prefill_per_step: int = 1,
+                 prefill_chunk: int = 64):
         self.model = model
         self.params = params
         self.cache_len = cache_len
         self.eos_id = eos_id
         self.max_prefill_per_step = max(1, int(max_prefill_per_step))
         self.kv = SlotKVCache(model, cache_len, num_slots)
+        # chunked prompt deposit needs the model's fixed-shape chunk step;
+        # families without a parity-safe one (SSM/hybrid, MoE routing,
+        # frontends, enc-dec) fall back to monolithic prefill
+        self.prefill_chunk = (min(int(prefill_chunk), int(cache_len))
+                              if (prefill_chunk
+                                  and getattr(model, "prefill_chunk", None)
+                                  is not None) else 0)
         self.scheduler = scheduler or CellQueueScheduler(
-            num_cells=4 * num_slots)
+            num_cells=4 * num_slots,
+            prefill_chunk_bytes=4 * self.prefill_chunk)
         if comm is not None:
             self._prefill_stream = comm.stream("prefill")
             self._decode_stream = comm.stream("decode")
@@ -140,24 +194,58 @@ class ContinuousEngine:
             self._prefill_stream = _NullStream()
             self._decode_stream = _NullStream()
 
-        self._prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len))
-        self._decode = jax.jit(self._decode_impl(model),
-                               donate_argnums=(1, 2))
+        # trace counters ~= XLA compile counts (a jit retraces exactly
+        # when it compiles a new program); the bench artifact uses these
+        # to show chunked prefill compiles O(1) programs while monolithic
+        # prefill compiles one per distinct prompt length
+        self.prefill_compiles = 0
+        self.decode_compiles = 0
+
+        def _prefill_traced(p, b):
+            self.prefill_compiles += 1
+            return model.prefill(p, b, cache_len)
+
+        decode_fn = self._decode_impl(model)
+
+        def _decode_traced(p, buf, state):
+            self.decode_compiles += 1
+            return decode_fn(p, buf, state)
+
+        self._prefill = jax.jit(_prefill_traced)
+        self._decode = jax.jit(_decode_traced, donate_argnums=(1, 2))
         self._admit_state = jax.jit(self._admit_impl, donate_argnums=(0,))
+        self._park_state = jax.jit(self._park_impl, donate_argnums=(0,))
+        if self.prefill_chunk:
+            chunk_fn = self._chunk_impl(model, num_slots)
+
+            def _chunk_traced(p, buf, state, *rest):
+                self.prefill_compiles += 1
+                return chunk_fn(p, buf, state, *rest)
+
+            self._chunk = jax.jit(_chunk_traced, donate_argnums=(1, 2))
+        #: partially-deposited requests, FIFO; each micro-step serves the
+        #: first ``max_prefill_per_step`` of them with one fused dispatch
+        self._prefilling: Deque[_PrefillJob] = deque()
 
         # per-slot sampling/position state lives ON DEVICE and is updated
         # inside the jits (donated) — the decode hot loop costs one
         # dispatch + one small token sync per micro-step, no host↔device
-        # state shuttling
+        # state shuttling. Positions start PARKED (far negative): rows of
+        # slots that are free or mid-prefill write nothing (drop-mode
+        # scatter in decode_step) however often the pool vmap advances.
         S = num_slots
-        self._state = {
+        self._state = self._fresh_state(S)
+        self._slot_req: List[Optional[ServeRequest]] = [None] * S
+        self._slot_out: List[Optional[np.ndarray]] = [None] * S
+
+    @staticmethod
+    def _fresh_state(S: int):
+        return {
             "tok": jnp.zeros((S, 1, 1), jnp.int32),    # next input token
-            "pos": jnp.zeros((S,), jnp.int32),         # next decode position
+            "pos": jnp.full((S,), PARK_POS, jnp.int32),  # next decode pos
             "keys": jnp.zeros((S, 2), jnp.uint32),     # per-slot PRNG keys
             "temp": jnp.zeros((S,), jnp.float32),
         }
-        self._slot_req: List[Optional[ServeRequest]] = [None] * S
-        self._slot_out: List[Optional[np.ndarray]] = [None] * S
 
     @staticmethod
     def _decode_impl(model):
@@ -190,6 +278,44 @@ class ContinuousEngine:
         }
         return state, tok0
 
+    @staticmethod
+    def _park_impl(state, slot):
+        """Park a retired slot's position: its decode-vmap row keeps
+        computing, but the drop-mode cache writes discard everything."""
+        return {**state, "pos": state["pos"].at[slot].set(PARK_POS)}
+
+    @staticmethod
+    def _chunk_impl(model, num_slots):
+        """One fused chunked-prefill dispatch over up to P chunk-rows from
+        different requests: gather their slot rows, run the model's
+        fixed-shape ``prefill_chunk`` vmapped across rows, scatter the
+        rows back, and — for rows whose prompt just completed
+        (``fin_pos >= 0``) — sample the first token and install the
+        slot's decode state, exactly as monolithic admission would.
+        Padding rows carry ``slots == num_slots``: the gather clamps and
+        every write drops."""
+        vchunk = jax.vmap(model.prefill_chunk, in_axes=(None, 0, 0, 0, 0))
+
+        def fn(params, buf, state, tokens, slots, pos0, n_valid, fin_pos,
+               keys, temps):
+            rows = SlotKVCache.rows_at(buf, slots)
+            logits, new_rows = vchunk(params, rows, tokens, pos0, n_valid)
+            buf = SlotKVCache.rows_into(buf, new_rows, slots)
+            split = jax.vmap(jax.random.split)(keys)          # (P, 2, 2)
+            tok0 = _sample_rows(logits, split[:, 1], temps)   # (P,)
+            fin = fin_pos >= 0
+            tslot = jnp.where(fin, slots, num_slots)          # drop non-final
+            state = {
+                "tok": state["tok"].at[tslot].set(
+                    tok0.reshape(-1, 1, 1), mode="drop"),
+                "pos": state["pos"].at[tslot].set(fin_pos, mode="drop"),
+                "keys": state["keys"].at[tslot].set(split[:, 0], mode="drop"),
+                "temp": state["temp"].at[tslot].set(temps, mode="drop"),
+            }
+            return buf, state, tok0
+
+        return fn
+
     # -- request intake ----------------------------------------------------
     def submit(self, req: ServeRequest, now: float = 0.0) -> str:
         """Queue a request through the cell-queue scheduler."""
@@ -200,22 +326,105 @@ class ContinuousEngine:
         return self.kv.num_live
 
     @property
+    def num_prefilling(self) -> int:
+        """Requests admitted to a slot but still streaming their prompt."""
+        return len(self._prefilling)
+
+    @property
+    def num_decoding(self) -> int:
+        return sum(r is not None for r in self._slot_req)
+
+    @property
     def idle(self) -> bool:
         return self.kv.num_live == 0 and self.scheduler.num_waiting == 0
 
     # -- micro-step --------------------------------------------------------
     def step(self, now: float = 0.0) -> List[ServeRequest]:
-        """One serving micro-step: admit + prefill up to
-        ``max_prefill_per_step`` requests, then advance every live slot by
-        one token. Returns the requests that finished this step."""
+        """One serving micro-step: deposit prompt material for up to
+        ``max_prefill_per_step`` requests (one chunk-row each, fused into
+        a single dispatch on the chunked path), then advance every
+        decoding slot by one token. Returns the requests that finished
+        this step."""
         finished: List[ServeRequest] = []
-        n_admit = min(self.kv.num_free, self.max_prefill_per_step)
-        for req in self.scheduler.admit(now, n_admit):
-            done = self._admit(req, now)
+        if self.prefill_chunk:
+            # admission keeps at most max_prefill_per_step prompts
+            # in flight; each gets one chunk per micro-step, so decode
+            # stalls are bounded by one chunk of prefill compute
+            budget = min(self.kv.num_free,
+                         self.max_prefill_per_step - len(self._prefilling))
+            for req in self.scheduler.admit(now, budget):
+                self._begin_prefill(req)
+            if self._prefilling:
+                finished.extend(self._prefill_chunk_step(now))
+        else:
+            n_admit = min(self.kv.num_free, self.max_prefill_per_step)
+            for req in self.scheduler.admit(now, n_admit):
+                done = self._admit(req, now)
+                if done is not None:
+                    finished.append(done)
+        if self.num_decoding:
+            finished.extend(self._decode_micro_step(now))
+        return finished
+
+    # -- chunked prompt deposit (rendezvous-style streaming) ---------------
+    def _begin_prefill(self, req: ServeRequest) -> None:
+        """Claim a slot and enter the ``prefilling`` state: the prompt
+        will stream into the slot chunk by chunk across micro-steps."""
+        slot = self.kv.alloc(req)
+        self.kv.reset_slot(slot)       # stale pages must not alias history
+        req.state = "prefilling"
+        tokens = np.asarray(req.batch["tokens"][0], np.int32)
+        key = jax.random.fold_in(jax.random.PRNGKey(req.seed), req.rid)
+        self._prefilling.append(_PrefillJob(req=req, slot=slot,
+                                            tokens=tokens, key=key))
+
+    def _prefill_chunk_step(self, now: float) -> List[ServeRequest]:
+        """One fused dispatch: the next chunk of up to
+        ``max_prefill_per_step`` prefilling requests, batched row-wise at
+        fixed shapes (shorter tails padded + masked, absent rows aimed at
+        the drop slot)."""
+        P, C = self.max_prefill_per_step, self.prefill_chunk
+        S = self.kv.num_slots
+        jobs = list(self._prefilling)[:P]
+        tok = np.zeros((P, C), np.int32)
+        slots = np.full((P,), S, np.int32)         # S = drop row
+        pos0 = np.zeros((P,), np.int32)
+        n_valid = np.zeros((P,), np.int32)
+        fin_pos = np.full((P,), -1, np.int32)
+        temps = np.zeros((P,), np.float32)
+        keys = np.zeros((P, 2), np.uint32)
+        for i, job in enumerate(jobs):
+            n = min(C, len(job.tokens) - job.off)
+            tok[i, :n] = job.tokens[job.off:job.off + n]
+            slots[i] = job.slot
+            pos0[i] = job.off
+            n_valid[i] = n
+            if job.off + n >= len(job.tokens):
+                fin_pos[i] = len(job.tokens)       # next decode position
+            temps[i] = job.req.temperature
+            keys[i] = np.asarray(job.key, np.uint32)
+            job.req.prefill_chunks += 1
+        buf, state, tok0 = self._chunk(
+            self.params, self.kv.buffers, self._state, jnp.asarray(tok),
+            jnp.asarray(slots), jnp.asarray(pos0), jnp.asarray(n_valid),
+            jnp.asarray(fin_pos), jnp.asarray(keys), jnp.asarray(temps))
+        self.kv.swap_buffers(self._prefill_stream.ordered(buf))
+        self._state = state
+
+        finished: List[ServeRequest] = []
+        tok0_np = None
+        for i, job in enumerate(jobs):
+            job.off += int(n_valid[i])
+            self.kv.advance(job.slot, int(n_valid[i]))  # pages appended
+            if fin_pos[i] < 0:
+                continue
+            if tok0_np is None:       # host sync only when a prompt completes
+                tok0_np = np.asarray(tok0)
+            self._prefilling.remove(job)
+            done = self._install_first_token(job.slot, job.req,
+                                             int(tok0_np[i]), now)
             if done is not None:
                 finished.append(done)
-        if self.kv.num_live:
-            finished.extend(self._decode_micro_step(now))
         return finished
 
     def _admit(self, req: ServeRequest, now: float) -> Optional[ServeRequest]:
@@ -237,14 +446,22 @@ class ContinuousEngine:
             self._state, logits, jnp.int32(slot), key,
             jnp.float32(req.temperature), jnp.int32(prompt_len))
         tok0 = int(np.asarray(tok0_dev))
+        return self._install_first_token(slot, req, tok0, now)
+
+    def _install_first_token(self, slot: int, req: ServeRequest, tok0: int,
+                             now: float) -> Optional[ServeRequest]:
+        """Record a freshly-admitted request's first sampled token and
+        either finish it immediately (EOS first token / max_new == 1) or
+        enter decoding. Shared by monolithic admission and the final
+        chunk of a chunked deposit. Returns the request iff finished."""
         req.first_token_time = now
+        req.state = "decoding"
         fill = self.eos_id if self.eos_id >= 0 else 0
         out = np.full((req.max_new_tokens,), fill, np.int32)
         out[0] = tok0
         req.generated = 1
         if (0 <= self.eos_id == tok0) or req.max_new_tokens == 1:
             return self._finish(slot, req, out, now)
-
         self._slot_req[slot] = req
         self._slot_out[slot] = out
         return None
@@ -259,6 +476,8 @@ class ContinuousEngine:
         finished: List[ServeRequest] = []
         for slot in self.kv.live_slots:
             req = self._slot_req[slot]
+            if req is None:        # slot still mid-prefill: nothing to read
+                continue
             t = int(nxt_np[slot])
             out = self._slot_out[slot]
             out[req.generated] = t
@@ -275,8 +494,26 @@ class ContinuousEngine:
                 now: float) -> ServeRequest:
         req.output = out
         self.kv.free(slot)
+        # park the freed slot's device position so its decode-vmap row
+        # stops writing (stale-slot advance was silently corrupting
+        # engine reuse before)
+        self._state = self._park_state(self._state, jnp.int32(slot))
         self.scheduler.record_finish(req, now)
         return req
+
+    def reset(self) -> None:
+        """Return the engine to its post-construction state: every slot
+        freed, device-side sampling/position state re-zeroed (positions
+        parked), scheduler queues and accounting cleared. Used by traffic
+        drivers after jit warm-up so warm requests leave no stale device
+        state or accounting behind (compiled programs are kept)."""
+        S = self.kv.num_slots
+        self._state = self._fresh_state(S)
+        self._slot_req = [None] * S
+        self._slot_out = [None] * S
+        self._prefilling.clear()
+        self.kv.reset()
+        self.scheduler.reset()
 
     # -- batch-API convenience (parity with StaticEngine.generate) --------
     def generate(self, batch, max_new_tokens: int, *,
@@ -294,8 +531,10 @@ class ContinuousEngine:
             reqs.append(req)
             self.submit(req, 0.0)
         steps = 0
+        chunk_steps = (sum(-(-r.prompt_len // self.prefill_chunk) + 1
+                           for r in reqs) if self.prefill_chunk else B)
         limit = (B * (max_new_tokens + 2)) // max(1, self.kv.num_slots) \
-            + B * (max_new_tokens + 2)
+            + B * (max_new_tokens + 2) + chunk_steps
         while not self.idle:
             self.step(0.0)
             steps += 1

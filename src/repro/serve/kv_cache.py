@@ -58,12 +58,46 @@ class SlotKVCache:
         # only in the ring sense — the model recycles pages past capacity
         self._len = np.zeros((num_slots,), np.int64)
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._reset_one = jax.jit(self._reset_slot_impl, donate_argnums=(0,))
+        self._gather = jax.jit(self.rows_at)
+        self._scatter = jax.jit(self.rows_into, donate_argnums=(0,))
 
     @staticmethod
     def _insert_impl(buf, one, slot):
         return jax.tree_util.tree_map(
             lambda b, o: lax.dynamic_update_slice_in_dim(
                 b, o[None].astype(b.dtype), slot, axis=0), buf, one)
+
+    @staticmethod
+    def _reset_slot_impl(buf, slot):
+        """Blank one slot's rows: positions to -1 (no valid pages), every
+        other leaf to zeros — the clean-slate a chunked prefill streams
+        into (a monolithic insert overwrites the whole slot instead)."""
+        def leaf(path, b):
+            fill = -1 if any(getattr(k, "key", None) == "pos"
+                             for k in path) else 0
+            return lax.dynamic_update_slice_in_dim(
+                b, jnp.full((1,) + b.shape[1:], fill, b.dtype), slot, axis=0)
+        return jax.tree_util.tree_map_with_path(leaf, buf)
+
+    # -- fixed-shape row views (chunked prefill) ---------------------------
+    @staticmethod
+    def rows_at(buf, slots):
+        """Gather per-slot cache rows: (num_slots, ...) -> (P, ...).
+        Out-of-range indices clamp (callers pad row batches with
+        ``num_slots`` and mask — the garbage gather is never written
+        back). Pure; composable inside a caller's fused jit."""
+        return jax.tree_util.tree_map(
+            lambda b: jnp.take(b, slots, axis=0, mode="clip"), buf)
+
+    @staticmethod
+    def rows_into(buf, rows, slots):
+        """Scatter updated rows back at ``slots`` (drop-mode: out-of-range
+        padding rows write nothing). The inverse of :meth:`rows_at`; pure,
+        composable inside a caller's fused jit."""
+        return jax.tree_util.tree_map(
+            lambda b, r: b.at[slots].set(r.astype(b.dtype), mode="drop"),
+            buf, rows)
 
     # -- pool management ---------------------------------------------------
     @property
@@ -134,3 +168,44 @@ class SlotKVCache:
         if self._owner[slot] is None:
             raise SlotError(f"advance on free slot {slot}")
         self._len[slot] += n
+
+    # -- chunked prefill (incremental deposit) -----------------------------
+    def reset_slot(self, slot: int) -> None:
+        """Blank a live slot before streaming a prompt into it chunk by
+        chunk: position pages to -1, state to zeros. Required because a
+        chunked deposit *appends* pages instead of overwriting the whole
+        slot — stale pages from the previous occupant must not alias as
+        valid history."""
+        if self._owner[slot] is None:
+            raise SlotError(f"reset of free slot {slot}")
+        self._buf = self._reset_one(self._buf, jnp.int32(slot))
+        self._len[slot] = 0
+
+    def take_rows(self, slots) -> Any:
+        """Gathered per-slot cache rows for ``slots`` (host-level wrapper
+        over :meth:`rows_at`)."""
+        return self._gather(self._buf, jnp.asarray(slots, jnp.int32))
+
+    def insert_at(self, slots, rows, lengths=None) -> None:
+        """Deposit updated cache rows back into their ``slots`` — the
+        append-pages half of a chunked handoff. ``lengths`` (optional,
+        same order as ``slots``) sets the resident-token count per slot;
+        chunk streaming instead accounts pages via :meth:`advance` as each
+        chunk lands."""
+        slots = np.asarray(slots)
+        self._buf = self._scatter(self._buf, rows,
+                                  jnp.asarray(slots, jnp.int32))
+        if lengths is not None:
+            for s, n in zip(slots.tolist(), np.asarray(lengths).tolist()):
+                if 0 <= s < self.num_slots:
+                    if self._owner[s] is None:
+                        raise SlotError(f"insert_at into free slot {s}")
+                    self._len[s] = int(n)
+
+    def reset(self) -> None:
+        """Return every slot to the free pool and zero the page accounting
+        (buffer contents are lazily reclaimed: the next occupant either
+        overwrites its slot wholesale or ``reset_slot``s it first)."""
+        self._free = list(range(self.num_slots - 1, -1, -1))
+        self._owner = [None] * self.num_slots
+        self._len[:] = 0

@@ -58,6 +58,10 @@ class ServeRequest:
     nbytes: int = 0
     cells: int = 0
     admit_cost_s: float = 0.0             # protocol-model admission price
+    # lifecycle: queued -> prefilling (chunked deposit in progress) ->
+    # decoding -> done; monolithic admission skips straight to decoding
+    state: str = "queued"
+    prefill_chunks: int = 0               # chunk dispatches this rode in
     submit_time: Optional[float] = None
     admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
@@ -83,18 +87,32 @@ class ServeRequest:
                                   if self.submit_time is not None
                                   else self.arrival)
 
+    @property
+    def ttft(self) -> float:
+        """Time to first token, from trace arrival."""
+        if self.first_token_time is None:
+            raise ValueError(f"request {self.rid} has no first token yet")
+        return self.first_token_time - self.arrival
+
 
 class CellQueueScheduler:
     """Bounded cell-pool admission queue with rendezvous deferral."""
 
     def __init__(self, num_cells: int = 16,
                  cell_size: int = protocol.DEFAULT_CELL_SIZE,
-                 itemsize: int = 4):
+                 itemsize: int = 4, prefill_chunk_bytes: int = 0):
         if num_cells < 1:
             raise ValueError("need at least one cell")
         self.num_cells = int(num_cells)
         self.cell_size = int(cell_size)
         self.itemsize = int(itemsize)
+        # the SAME HostModel (same cell) classifies and prices — a
+        # non-default cell must not be classified against one cell size
+        # but priced against the default one
+        self.host_model = protocol.HostModel(cell=int(cell_size))
+        # >0: rendezvous-class prompts stream chunk-by-chunk into their
+        # slot (chunked prefill) and are priced as chunked handoffs
+        self.prefill_chunk_bytes = int(prefill_chunk_bytes)
         self.cells_free = int(num_cells)
         self._cellq: Deque[ServeRequest] = deque()      # buffered (eager)
         self._overflow: Deque[ServeRequest] = deque()   # eager, pool full
@@ -106,13 +124,39 @@ class CellQueueScheduler:
         self.n_deferred = 0           # overflow + rendezvous submissions
         self.modeled_admit_cost_s = 0.0
 
+    def reset(self) -> None:
+        """Drop all queued/finished requests and zero the accounting —
+        the post-warm-up clean slate (queue *configuration* is kept)."""
+        self.cells_free = self.num_cells
+        self._cellq.clear()
+        self._overflow.clear()
+        self._rendezvous.clear()
+        self.finished = []
+        self.n_submitted = 0
+        self.n_eager_admits = 0
+        self.n_deferred = 0
+        self.modeled_admit_cost_s = 0.0
+
     # -- classification ----------------------------------------------------
+    def _price(self, nbytes: int, proto: str) -> float:
+        """Protocol-model admission price, matching what the engine
+        actually does with the prompt: in chunked-prefill mode every
+        prompt larger than one chunk streams into its slot incrementally
+        and pays the chunked handoff (handshake + per-chunk envelopes) —
+        eager-class or not; prompts that fit a single chunk deposit whole
+        and keep their eager/1-copy price."""
+        if 0 < self.prefill_chunk_bytes < nbytes:
+            return protocol.chunked_handoff_latency(
+                nbytes, self.prefill_chunk_bytes, self.host_model)
+        return protocol.interthread_latency(nbytes, self.host_model,
+                                            proto=proto)
+
     def _classify(self, req: ServeRequest, now: float) -> str:
         req.submit_time = now
         req.nbytes = int(req.batch["tokens"].size) * self.itemsize
         req.protocol = protocol.select_protocol(
             req.nbytes, interthread=True, cell=self.cell_size)
-        req.admit_cost_s = protocol.interthread_latency(req.nbytes)
+        req.admit_cost_s = self._price(req.nbytes, req.protocol)
         req.cells = (max(1, math.ceil(req.nbytes / self.cell_size))
                      if req.protocol in EAGER_CLASS else 0)
         self.modeled_admit_cost_s += req.admit_cost_s
@@ -124,6 +168,7 @@ class CellQueueScheduler:
         (``"cells" | "overflow" | "rendezvous"``)."""
         proto = self._classify(req, now)
         self.n_submitted += 1
+        req.state = "queued"
         if proto in EAGER_CLASS and req.cells <= self.num_cells:
             if req.cells <= self.cells_free:
                 self.cells_free -= req.cells
@@ -133,9 +178,16 @@ class CellQueueScheduler:
             self._overflow.append(req)
             self.n_deferred += 1
             return "overflow"
-        # rendezvous discipline: 1-copy sized prompts, and eager prompts
-        # that could NEVER fit the cell pool even when empty (they must
-        # not wait in overflow for a promotion that cannot happen)
+        if proto in EAGER_CLASS:
+            # eager prompts that could NEVER fit the cell pool even when
+            # empty re-route to the rendezvous discipline (they must not
+            # wait in overflow for a promotion that cannot happen) — and
+            # their accounting must say so: reclassify protocol + price
+            # instead of reporting an eager-priced row that rendezvoused
+            self.modeled_admit_cost_s -= req.admit_cost_s
+            req.protocol = "one_copy"
+            req.admit_cost_s = self._price(req.nbytes, "one_copy")
+            self.modeled_admit_cost_s += req.admit_cost_s
         req.cells = 0
         self._rendezvous.append(req)
         self.n_deferred += 1
@@ -170,6 +222,7 @@ class CellQueueScheduler:
     # -- completion / stats ------------------------------------------------
     def record_finish(self, req: ServeRequest, now: float) -> None:
         req.finish_time = now
+        req.state = "done"
         self.finished.append(req)
 
     @property
@@ -188,7 +241,7 @@ class CellQueueScheduler:
         lat = np.array([r.latency for r in self.finished])
         qd = np.array([r.queue_delay for r in self.finished])
         toks = int(sum(r.generated for r in self.finished))
-        return {
+        out = {
             "n": float(len(lat)),
             "latency_p50_s": float(np.percentile(lat, 50)),
             "latency_p95_s": float(np.percentile(lat, 95)),
@@ -197,6 +250,13 @@ class CellQueueScheduler:
             "queue_delay_p95_s": float(np.percentile(qd, 95)),
             "tokens": float(toks),
         }
+        ttft = np.array([r.ttft for r in self.finished
+                         if r.first_token_time is not None])
+        if ttft.size:
+            out["ttft_p50_s"] = float(np.percentile(ttft, 50))
+            out["ttft_p95_s"] = float(np.percentile(ttft, 95))
+            out["ttft_mean_s"] = float(ttft.mean())
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -211,14 +271,17 @@ class TraceEntry:
     prompt_len: int = 0
 
 
-def make_trace(n_requests: int, *, prompt_len: int, max_new,
+def make_trace(n_requests: int, *, prompt_len, max_new,
                arrival: str = "poisson", rate: float = 100.0,
                burst: int = 4, temperature: float = 0.0,
                seed: int = 0) -> List[TraceEntry]:
     """Arrival trace: ``arrival`` is ``"poisson"`` (exponential gaps at
     ``rate`` req/s), ``"burst"`` (groups of ``burst`` at 1/rate spacing)
     or ``"all"`` (everything at t=0). ``max_new`` is an int or an
-    inclusive ``(lo, hi)`` range sampled per request."""
+    inclusive ``(lo, hi)`` range sampled per request. ``prompt_len`` is an
+    int or a sequence cycled across requests — e.g. ``(16, 256)`` yields
+    the short/long interleave that exposes prefill head-of-line
+    blocking."""
     rng = np.random.default_rng(seed)
     if arrival == "poisson":
         gaps = rng.exponential(1.0 / rate, size=n_requests)
@@ -235,8 +298,11 @@ def make_trace(n_requests: int, *, prompt_len: int, max_new,
     else:
         lo, hi = max_new
         news = rng.integers(lo, hi + 1, size=n_requests)
+    plens = ([int(prompt_len)] if isinstance(prompt_len, (int, np.integer))
+             else [int(p) for p in prompt_len])
     return [TraceEntry(arrival=float(times[i]), max_new=int(news[i]),
-                       temperature=temperature, prompt_len=prompt_len)
+                       temperature=temperature,
+                       prompt_len=plens[i % len(plens)])
             for i in range(n_requests)]
 
 

@@ -1,0 +1,273 @@
+"""Chunked, batched prefill for the continuous engine (DESIGN.md §8):
+token parity against monolithic prefill and the static baseline, O(1)
+prefill compiles across distinct prompt lengths, per-request sampling
+determinism under any admission order / chunking config, slot reuse
+after an EOS first token, the prefilling scheduler state, and engine
+``reset()`` (no stale device state after warm-up)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig, TrainConfig
+from repro.configs import get_smoke_config
+from repro.models.registry import build_model, make_synthetic_batch
+from repro.serve import ContinuousEngine, ServeRequest, StaticEngine
+
+TRAIN = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                    loss_chunk=16, attn_chunk_threshold=64, attn_chunk=16,
+                    remat=False)
+
+
+def _bundle(arch="gemma-2b", seed=0):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, TRAIN, ServeConfig(), tp=1)
+    return cfg, model, model.init(jax.random.PRNGKey(seed))
+
+
+def _prompt(cfg, B=4, S=8, seed=0):
+    batch = make_synthetic_batch(cfg, B, S, seed=seed,
+                                 compute_dtype="float32")
+    return {"tokens": batch["tokens"]}
+
+
+def _cont(model, params, *, cache_len, num_slots, chunk, per_step=1,
+          eos_id=-1):
+    return ContinuousEngine(model, params, cache_len=cache_len,
+                            num_slots=num_slots, eos_id=eos_id,
+                            prefill_chunk=chunk,
+                            max_prefill_per_step=per_step)
+
+
+# ---------------------------------------------------------------------------
+# parity: chunked deposit must be token-identical to monolithic prefill
+# ---------------------------------------------------------------------------
+
+def test_chunked_vs_monolithic_token_parity_greedy():
+    """Multi-chunk prompts (20 tokens, chunks of 8/5/64) produce exactly
+    the tokens of the monolithic prefill and the static baseline."""
+    cfg, model, params = _bundle()
+    prompt = _prompt(cfg, B=3, S=20, seed=3)
+    static = StaticEngine(model, params, cache_len=36).generate(prompt, 10)
+    mono = _cont(model, params, cache_len=36, num_slots=3,
+                 chunk=0).generate(prompt, 10)
+    assert np.array_equal(static, mono)
+    for chunk, per_step in ((8, 2), (5, 1), (64, 3)):
+        out = _cont(model, params, cache_len=36, num_slots=3, chunk=chunk,
+                    per_step=per_step).generate(prompt, 10)
+        assert np.array_equal(static, out), (chunk, per_step)
+
+
+def test_chunked_parity_fewer_slots_than_requests():
+    """Slot recycling with chunked deposits: freed slots are re-streamed
+    into (reset_slot) without stale pages aliasing as history."""
+    cfg, model, params = _bundle()
+    prompt = _prompt(cfg, B=4, S=12, seed=5)
+    static = StaticEngine(model, params, cache_len=24).generate(prompt, 9)
+    cont = _cont(model, params, cache_len=24, num_slots=2, chunk=4,
+                 per_step=2).generate(prompt, 9)
+    assert np.array_equal(static, cont)
+
+
+def test_non_dense_families_fall_back_to_monolithic():
+    """Families without a parity-safe fixed-shape chunk step (SSM state
+    threading, capacity-limited MoE routing) keep the monolithic path
+    even when chunking is requested."""
+    cfg, model, params = _bundle("mamba2-370m")
+    assert model.prefill_chunk is None
+    eng = _cont(model, params, cache_len=16, num_slots=2, chunk=8)
+    assert eng.prefill_chunk == 0
+    prompt = _prompt(cfg, B=2, S=8)
+    static = StaticEngine(model, params, cache_len=16).generate(prompt, 6)
+    assert np.array_equal(static, eng.generate(prompt, 6))
+    # MoE: per-chunk expert-capacity competition would break parity
+    _, moe_model, moe_params = _bundle("olmoe-1b-7b")
+    assert moe_model.prefill_chunk is None
+    assert _cont(moe_model, moe_params, cache_len=16, num_slots=2,
+                 chunk=8).prefill_chunk == 0
+
+
+# ---------------------------------------------------------------------------
+# O(1) compiles: the chunk jit never sees a new shape
+# ---------------------------------------------------------------------------
+
+def test_prefill_compile_count_independent_of_prompt_lengths():
+    cfg, model, params = _bundle()
+    chunked = _cont(model, params, cache_len=40, num_slots=2, chunk=8,
+                    per_step=2)
+    mono = _cont(model, params, cache_len=40, num_slots=2, chunk=0)
+    for eng in (chunked, mono):
+        for S in (5, 12, 20):
+            eng.generate(_prompt(cfg, B=1, S=S, seed=S), 3)
+    assert chunked.prefill_compiles == 1          # one chunk program, ever
+    assert mono.prefill_compiles == 3             # one per distinct length
+
+
+# ---------------------------------------------------------------------------
+# sampling determinism: fold_in(rid) key streams are admission-invariant
+# ---------------------------------------------------------------------------
+
+def _run_trace(model, params, prompts, *, chunk, per_step, num_slots,
+               order, temperature=0.7, seed=11, max_new=6):
+    eng = _cont(model, params, cache_len=40, num_slots=num_slots,
+                chunk=chunk, per_step=per_step)
+    reqs = {}
+    for rid in order:
+        req = ServeRequest(rid=rid, batch=prompts[rid],
+                           max_new_tokens=max_new,
+                           temperature=temperature, seed=seed)
+        reqs[rid] = req
+        eng.submit(req, 0.0)
+    steps = 0
+    while not eng.idle:
+        eng.step(0.0)
+        steps += 1
+        assert steps < 500
+    return {rid: r.output.copy() for rid, r in reqs.items()}
+
+
+def test_temperature_decode_deterministic_across_admission_and_chunking():
+    """temperature>0 outputs are a pure function of (rid, seed): any
+    admission order, slot count, ``max_prefill_per_step`` and chunk size
+    (including monolithic) yields identical per-request tokens."""
+    cfg, model, params = _bundle()
+    prompts = {rid: _prompt(cfg, B=1, S=6 + 3 * rid, seed=100 + rid)
+               for rid in range(4)}
+    base = _run_trace(model, params, prompts, chunk=8, per_step=1,
+                      num_slots=2, order=[0, 1, 2, 3])
+    for kw in (dict(chunk=8, per_step=1, num_slots=2, order=[3, 1, 0, 2]),
+               dict(chunk=4, per_step=3, num_slots=4, order=[2, 0, 3, 1]),
+               dict(chunk=0, per_step=2, num_slots=3, order=[1, 3, 2, 0])):
+        out = _run_trace(model, params, prompts, **kw)
+        for rid in prompts:
+            assert np.array_equal(base[rid], out[rid]), (rid, kw)
+
+
+# ---------------------------------------------------------------------------
+# EOS on the first token + slot reuse
+# ---------------------------------------------------------------------------
+
+def test_slot_reuse_after_eos_first_token_chunked():
+    """A request whose very first sampled token is EOS finishes at the
+    end of its prefill; its slot must be immediately reusable and the
+    next occupant's tokens unaffected."""
+    cfg, model, params = _bundle()
+    p0 = _prompt(cfg, B=1, S=10, seed=7)
+    free = StaticEngine(model, params, cache_len=24).generate(p0, 4)
+    eos = int(free[0, 0])
+    p1 = _prompt(cfg, B=1, S=10, seed=8)
+    solo = _cont(model, params, cache_len=24, num_slots=1, chunk=4,
+                 eos_id=eos).generate(p1, 6)
+
+    eng = _cont(model, params, cache_len=24, num_slots=1, chunk=4,
+                per_step=1, eos_id=eos)
+    r0 = ServeRequest(rid=0, batch=p0, max_new_tokens=6)
+    r1 = ServeRequest(rid=1, batch=p1, max_new_tokens=6)
+    eng.submit(r0, 0.0)
+    eng.submit(r1, 0.0)
+    steps = 0
+    while not eng.idle:
+        eng.step(0.0)
+        steps += 1
+        assert steps < 200
+    assert r0.generated == 1 and r0.output[0] == eos
+    assert (r0.output == eos).all()               # eos-padded tail
+    assert np.array_equal(r1.output, solo[0])     # clean slot reuse
+
+
+# ---------------------------------------------------------------------------
+# prefilling scheduler state + accounting
+# ---------------------------------------------------------------------------
+
+def test_prefilling_state_and_chunk_accounting():
+    cfg, model, params = _bundle()
+    eng = _cont(model, params, cache_len=40, num_slots=2, chunk=8,
+                per_step=1)
+    req = ServeRequest(rid=0, batch=_prompt(cfg, B=1, S=20, seed=2),
+                       max_new_tokens=3)
+    eng.submit(req, 0.0)
+    assert req.state == "queued"
+    eng.step(0.0)                       # admitted + first chunk deposited
+    assert req.state == "prefilling"
+    assert eng.num_prefilling == 1 and eng.num_decoding == 0
+    assert req.first_token_time is None
+    eng.step(1.0)
+    eng.step(2.0)                       # 20 tokens / chunk 8 -> 3 chunks
+    assert req.state == "decoding"
+    assert req.prefill_chunks == 3
+    # first token sampled at the final chunk, plus the same step's decode
+    # micro-step (finalized slots decode immediately, like monolithic)
+    assert req.first_token_time == 2.0 and req.generated == 2
+    while not eng.idle:
+        eng.step(3.0)
+    assert req.state == "done" and req.generated == 3
+    assert eng.scheduler.latency_stats()["ttft_p95_s"] == pytest.approx(2.0)
+
+
+def test_drive_static_mixed_temperature_samples_per_row():
+    """Bugfix: a static batch group applied group[0]'s temperature to
+    every row; greedy rows in a mixed-temperature group must stay exactly
+    greedy."""
+    from repro.launch.serve import drive_static
+    cfg, model, params = _bundle()
+    eng = StaticEngine(model, params, cache_len=24)
+    prompt = _prompt(cfg, B=4, S=8, seed=4)
+    greedy = eng.generate(prompt, 6)                      # temperature 0
+    reqs = [ServeRequest(rid=i,
+                         batch={"tokens": prompt["tokens"][i:i + 1]},
+                         max_new_tokens=6,
+                         temperature=0.0 if i < 2 else 0.9)
+            for i in range(4)]
+    drive_static(eng, reqs, batch_size=4)
+    for i in range(2):                  # greedy rows unaffected by the mix
+        assert np.array_equal(reqs[i].output, greedy[i])
+    assert all(r.output is not None for r in reqs)
+
+
+def test_drive_static_heterogeneous_seeds_raise():
+    from repro.launch.serve import drive_static
+    cfg, model, params = _bundle()
+    eng = StaticEngine(model, params, cache_len=24)
+    prompt = _prompt(cfg, B=2, S=8)
+    reqs = [ServeRequest(rid=i, batch={"tokens": prompt["tokens"][i:i + 1]},
+                         max_new_tokens=4, temperature=0.5, seed=i)
+            for i in range(2)]
+    with pytest.raises(ValueError, match="heterogeneous seeds"):
+        drive_static(eng, reqs, batch_size=2)
+
+
+def test_drive_static_buckets_mixed_prompt_lengths():
+    """Static batches need rectangular prompts: a mixed-length trace is
+    bucketed by prompt length instead of crashing on ragged concat."""
+    from repro.launch.serve import drive_static
+    cfg, model, params = _bundle()
+    eng = StaticEngine(model, params, cache_len=32)
+    reqs = []
+    for i in range(4):
+        S = 8 if i % 2 == 0 else 16
+        p = _prompt(cfg, B=1, S=S, seed=20 + i)
+        reqs.append(ServeRequest(rid=i, batch=p, max_new_tokens=4))
+    stats = drive_static(eng, reqs, batch_size=2)
+    assert stats["n"] == 4.0
+    assert all(r.output is not None and r.finish_time is not None
+               for r in reqs)
+
+
+def test_engine_reset_clears_stale_state():
+    """After warm-up traffic, ``reset()`` returns the engine to a clean
+    slate: freed-slot device state is parked (no silent advancing), the
+    pool is empty, the scheduler accounting zeroed — and a post-reset run
+    is token-identical to a fresh engine's."""
+    cfg, model, params = _bundle()
+    prompt = _prompt(cfg, B=2, S=8)
+    fresh = _cont(model, params, cache_len=24, num_slots=2, chunk=4)
+    expect = fresh.generate(prompt, 8)
+
+    eng = _cont(model, params, cache_len=24, num_slots=2, chunk=4)
+    eng.generate(_prompt(cfg, B=2, S=6, seed=9), 5)      # warm-up traffic
+    assert eng.scheduler.n_submitted == 2
+    eng.reset()
+    assert eng.idle and eng.kv.num_free == eng.kv.num_slots
+    assert eng.scheduler.n_submitted == 0
+    assert not eng.scheduler.finished
+    assert np.array_equal(eng.generate(prompt, 8), expect)

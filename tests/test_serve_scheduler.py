@@ -73,6 +73,88 @@ def test_rendezvous_class_defers_until_slot_free():
     assert out[1].protocol == "one_copy" and out[1].cells == 0
 
 
+def test_non_default_cell_classification_and_pricing_agree():
+    """Bugfix: classification used the configured cell_size while pricing
+    used the default HostModel cell — a multi-cell eager prompt was
+    priced on the request-object-free fast path. Both now run through
+    HostModel(cell=cell_size)."""
+    s = CellQueueScheduler(num_cells=8, cell_size=256)
+    # 128 tokens = 512B: > one 256B cell (not eager_fast), <= 4096B eager
+    s.submit(_req(0, 128), 0.0)
+    (q,) = s.admit(1.0, free_slots=1)
+    assert q.protocol == "eager" and q.cells == 2
+    m = protocol.HostModel(cell=256)
+    assert q.admit_cost_s == pytest.approx(
+        protocol.interthread_latency(512, m))
+    # multi-cell eager pays the request object the fast path skips
+    assert q.admit_cost_s > protocol.interthread_latency(512, m,
+                                                         proto="eager_fast")
+    assert s.modeled_admit_cost_s == pytest.approx(q.admit_cost_s)
+
+
+def test_pool_oversized_eager_reclassified_as_one_copy():
+    """Bugfix: an eager-class prompt re-routed to the rendezvous queue
+    (it could never fit the cell pool) kept its eager protocol and eager
+    price in the accounting rows; it is now reclassified + re-priced."""
+    s = CellQueueScheduler(num_cells=2, cell_size=1024)
+    # 800 tokens = 3200B: eager class, but needs 4 cells > pool of 2
+    assert s.submit(_req(0, 800), 0.0) == "rendezvous"
+    (q,) = s.admit(1.0, free_slots=1)
+    assert q.protocol == "one_copy" and q.cells == 0
+    m = protocol.HostModel(cell=1024)
+    assert q.admit_cost_s == pytest.approx(
+        protocol.interthread_latency(3200, m, proto="one_copy"))
+    assert s.modeled_admit_cost_s == pytest.approx(q.admit_cost_s)
+
+
+def test_chunked_handoff_pricing_matches_deposit_mechanics():
+    """With prefill chunking on, every prompt larger than one chunk
+    streams into its slot incrementally — rendezvous-class *and*
+    multi-chunk eager-class prompts are priced as chunked handoffs
+    (per-chunk envelopes on top of one handshake); prompts that fit a
+    single chunk deposit whole and keep their eager price."""
+    chunk_bytes = 64 * 4
+    s = CellQueueScheduler(num_cells=8, prefill_chunk_bytes=chunk_bytes)
+    s.submit(_req(0, 2000), 0.0)          # 8000B > eager threshold
+    s.submit(_req(1, 200), 0.0)           # 800B eager class, 4 chunks
+    s.submit(_req(2, 16), 0.0)            # 64B: fits one chunk
+    admitted = {q.rid: q for q in s.admit(1.0, free_slots=3)}
+    m = s.host_model
+    assert admitted[0].admit_cost_s == pytest.approx(
+        protocol.chunked_handoff_latency(8000, chunk_bytes, m))
+    assert admitted[0].admit_cost_s > protocol.interthread_latency(8000, m)
+    assert admitted[1].admit_cost_s == pytest.approx(
+        protocol.chunked_handoff_latency(800, chunk_bytes, m))
+    assert admitted[2].admit_cost_s == pytest.approx(
+        protocol.interthread_latency(64, m))
+
+
+def test_chunked_handoff_latency_model():
+    m = protocol.HostModel()
+    one = protocol.chunked_handoff_latency(8000, 8000, m)
+    many = protocol.chunked_handoff_latency(8000, 256, m)
+    assert many > one                       # more chunks, more envelopes
+    assert many - one == pytest.approx((-(-8000 // 256) - 1) * m.t_envelope)
+    with pytest.raises(ValueError):
+        protocol.chunked_handoff_latency(100, 0)
+    with pytest.raises(ValueError, match="unknown protocol"):
+        protocol.interthread_latency(64, m, proto="two_copy")
+
+
+def test_scheduler_reset_clears_queues_and_accounting():
+    s = CellQueueScheduler(num_cells=2, cell_size=1024)
+    s.submit(_req(0, 16), 0.0)
+    s.submit(_req(1, 2000), 0.0)
+    (q,) = s.admit(1.0, free_slots=1)
+    q.generated = 1
+    s.record_finish(q, 2.0)
+    s.reset()
+    assert s.num_waiting == 0 and s.cells_free == s.num_cells
+    assert s.n_submitted == 0 and s.n_deferred == 0
+    assert s.modeled_admit_cost_s == 0.0 and not s.finished
+    assert s.submit(_req(2, 16), 3.0) == "cells"    # still usable
+
+
 def test_fifo_within_class_and_accounting():
     s = CellQueueScheduler(num_cells=16)
     for i in range(4):
@@ -124,6 +206,34 @@ def test_slot_pool_alloc_free_lifecycle():
     assert kv.buffers["k"].shape == (2, 2, 1, 8, 1, 4)
 
 
+def test_slot_rows_insert_at_and_reset_slot():
+    """Chunked-handoff page API: gather slot rows, mutate, scatter back
+    (out-of-range padding rows drop), blank a slot before streaming."""
+    import jax.numpy as jnp
+    kv = SlotKVCache(_StubModel(), cache_len=8, num_slots=3)
+    a = kv.alloc("req-a")
+    one = _StubModel.init_cache(1, 8)
+    kv.insert(a, one, length=5)
+    rows = kv.take_rows([a, kv.num_slots])          # second row = padding
+    assert rows["k"].shape == (2, 2, 1, 8, 1, 4)
+    rows = {"k": rows["k"] + 1.0, "pos": rows["pos"] * 0 + 3}
+    kv.insert_at([a, kv.num_slots], rows, lengths=[7, 99])
+    assert (np.asarray(kv.buffers["k"][a]) == 1.0).all()
+    assert kv.length(a) == 7
+    # padding row dropped: no other slot was touched (pool init is zeros)
+    assert (np.asarray(kv.buffers["pos"][(a + 1) % 3]) == 0).all()
+    kv.advance(a, 2)                                # append-pages account
+    assert kv.length(a) == 9
+    kv.reset_slot(a)
+    assert (np.asarray(kv.buffers["pos"][a]) == -1).all()
+    assert (np.asarray(kv.buffers["k"][a]) == 0.0).all()
+    assert kv.length(a) == 0
+    with pytest.raises(SlotError):
+        kv.reset_slot((a + 1) % 3)                  # free slot
+    kv.reset()
+    assert kv.num_free == 3 and kv.live_slots == []
+
+
 # ---------------------------------------------------------------------------
 # traces + replica fan-out
 # ---------------------------------------------------------------------------
@@ -139,6 +249,9 @@ def test_make_trace_kinds_and_shard():
     assert tb[0].arrival == tb[3].arrival and tb[4].arrival > tb[3].arrival
     with pytest.raises(ValueError):
         make_trace(4, prompt_len=8, max_new=2, arrival="bogus")
+    # mixed prompt lengths cycle across the trace (short/long interleave)
+    tm = make_trace(6, prompt_len=(16, 256), max_new=4, arrival="all")
+    assert [e.prompt_len for e in tm] == [16, 256, 16, 256, 16, 256]
     s0, s1 = shard_trace(tr, 0, 2), shard_trace(tr, 1, 2)
     assert len(s0) + len(s1) == len(tr)
     assert not {id(e) for e in s0} & {id(e) for e in s1}

@@ -40,7 +40,8 @@ def rows(fast: bool = False) -> Iterator[Row]:
     res = run_traffic("gemma-2b", smoke=True, engine="both",
                       parity_check=True, **(TRACE_FAST if fast else TRACE))
 
-    for eng in ("static", "continuous", "continuous_monolithic"):
+    for eng in ("static", "continuous", "continuous_monolithic",
+                "continuous_paged"):
         if eng not in res:
             continue
         m = res[eng]
@@ -69,6 +70,18 @@ def rows(fast: bool = False) -> Iterator[Row]:
                f"for {res['distinct_prompt_lens']} distinct prompt lens); "
                f"prompt_len_independent="
                f"{res['prefill_compiles_prompt_len_independent']}")
+    if "paged_max_concurrency" in res:
+        yield ("serve_paged_bytes_per_token",
+               res["paged_bytes_per_resident_token"],
+               f"slot={res['slot_bytes_per_resident_token']:.0f} B/resident-"
+               f"tok at equal HBM (block={res['block_size']} tok x "
+               f"{res['paged_num_blocks']} blocks); token_identical="
+               f"{res['paged_token_identical_trace']}")
+        yield ("serve_paged_max_concurrency", res["paged_max_concurrency"],
+               f"slot={res['slot_max_concurrency']:.0f} peak concurrent at "
+               f"equal HBM; verified_more_concurrent="
+               f"{res['paged_more_concurrent_verified']} hbm_within_budget="
+               f"{res['paged_hbm_within_budget']}")
     yield ("serve_parity_greedy", 0.0,
            f"token_identical={res['parity_token_identical']} "
            f"(chunked ContinuousEngine vs StaticEngine, same-arrival "

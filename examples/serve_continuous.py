@@ -3,13 +3,14 @@
 Requests stream in on a Poisson trace with mixed prompt lengths; the
 cell-queue scheduler admits them against the paper's bounded cell pool
 (eager buffering for small prompts, rendezvous deferral for large ones),
-prompts *stream into their slot in fixed-size chunks* interleaved with
+prompts *stream into their cache in fixed-size chunks* interleaved with
 decode micro-steps (rendezvous-style chunked prefill — long prompts
 never stall in-flight decodes, and the chunk jit never recompiles for a
-new prompt length), the slot-pool KV cache recycles decode state across
-in-flight requests, and prefill/decode micro-steps are ordered on two
-distinct ``CommStream``s of a root threadcomm — the serving substrate of
-DESIGN.md §8 in ~60 lines.
+new prompt length), the KV cache is *paged*: fixed-size blocks leased
+from one global pool through per-request block tables, admission gated
+on free blocks (DESIGN.md §9), and prefill/decode micro-steps are
+ordered on two distinct ``CommStream``s of a root threadcomm — the
+serving substrate of DESIGN.md §8–§9 in ~60 lines.
 
 Run:  PYTHONPATH=src python examples/serve_continuous.py
 """
@@ -43,8 +44,10 @@ def main():
     eng = ContinuousEngine(model, params, cache_len=80, num_slots=SLOTS,
                            comm=root, prefill_chunk=CHUNK,
                            max_prefill_per_step=2,
+                           kv_layout="paged", block_size=16,
                            scheduler=CellQueueScheduler(
-                               num_cells=8, prefill_chunk_bytes=4 * CHUNK))
+                               num_cells=8, prefill_chunk_bytes=4 * CHUNK,
+                               block_bytes=4 * 16))
     trace = make_trace(REQUESTS, prompt_len=PROMPTS, max_new=(4, 24), seed=0)
     reqs = []
     for rid, entry in enumerate(trace):
@@ -67,10 +70,12 @@ def main():
             print(f"   finished req {r.rid:2d} after {r.generated:2d} "
                   f"tokens, {r.prefill_chunks} prefill chunks "
                   f"(micro-step {steps}, live={eng.num_active}, "
-                  f"prefilling={eng.num_prefilling})")
+                  f"prefilling={eng.num_prefilling}, "
+                  f"free_blocks={eng.kv.num_free_blocks})")
     print(f" drained {len(reqs)} requests in {steps} micro-steps over "
-          f"{SLOTS} slots ({eng.prefill_compiles} prefill compile(s) for "
-          f"{len(set(PROMPTS))} prompt lengths)")
+          f"{eng.kv.pool.num_blocks} KV blocks / {SLOTS} rows "
+          f"(peak {eng.peak_live} concurrent, {eng.prefill_compiles} "
+          f"prefill compile(s) for {len(set(PROMPTS))} prompt lengths)")
 
     # greedy parity against the static baseline (same-arrival batch of
     # the LONG prompts: a multi-chunk deposit, still token-identical)
@@ -80,7 +85,11 @@ def main():
     static = StaticEngine(model, params, cache_len=80).generate(prompt, 8)
     cont = ContinuousEngine(model, params, cache_len=80, num_slots=SLOTS,
                             prefill_chunk=CHUNK).generate(prompt, 8)
-    print(" parity vs StaticEngine:", bool(np.array_equal(static, cont)))
+    paged = ContinuousEngine(model, params, cache_len=80, num_slots=SLOTS,
+                             prefill_chunk=CHUNK, kv_layout="paged",
+                             block_size=16).generate(prompt, 8)
+    print(" parity vs StaticEngine:", bool(np.array_equal(static, cont)),
+          "paged:", bool(np.array_equal(static, paged)))
 
     root.finish()
     root.free()

@@ -101,6 +101,22 @@ def chunked_handoff_latency(nbytes: int, chunk_bytes: int,
             + nchunks * m.t_envelope + nbytes / m.bw_copy)
 
 
+def paged_admission_latency(nbytes: int, chunk_bytes: int, block_bytes: int,
+                            m: HostModel = HostModel()) -> float:
+    """Admission price of a *paged* chunked deposit: the chunked handoff
+    (one handshake + per-chunk envelopes, payload crossing once) plus a
+    quarter-envelope per KV block the payload will occupy — the block
+    table entry writes, priced like the multi-cell surcharge in
+    :func:`interprocess_latency`. This is what a block-aware scheduler
+    charges when the prompt lands in pool blocks leased through a table
+    instead of one contiguous slot."""
+    if block_bytes < 1:
+        raise ValueError("block_bytes must be >= 1")
+    nblocks = max(1, -(-nbytes // block_bytes))
+    return (chunked_handoff_latency(nbytes, chunk_bytes, m)
+            + nblocks * m.t_envelope * 0.25)
+
+
 def interprocess_latency(nbytes: int, m: HostModel = HostModel()) -> float:
     """MPI-everywhere shared-memory messaging (eager / rndv, always 2-copy)."""
     if nbytes <= EAGER_THRESHOLD_INTERPROCESS:

@@ -1,0 +1,145 @@
+"""Paged-attention decode kernel for TPU (single-token queries).
+
+The serving KV cache is a global pool of fixed-size blocks (``serve/
+block_pool.py``); each in-flight request owns a *block table* — the list
+of pool blocks holding its tokens in order. Decode attention therefore
+cannot stream K/V contiguously the way ``kernels/flash_attention`` does:
+the kv blocks of one request are scattered across the pool.
+
+This kernel gathers them through the table with *scalar prefetch*
+(``pltpu.PrefetchScalarGridSpec``): the block tables and lengths ride in
+SMEM ahead of the grid, and the k/v BlockSpec index maps read
+``tables[b, i]`` to aim the automatic HBM→VMEM pipeline at the right
+pool block — the gather costs no extra copies, it *is* the pipeline.
+Grid is (B, NB) with the table index minor-most, so the running
+max / sum / accumulator of the online softmax live in VMEM scratch
+across one request's blocks and the output is emitted on the last one
+(same discipline as the flash kernel).
+
+Because block ``i`` of a table holds the request's tokens
+``[i*bs, (i+1)*bs)``, positions are structural — no per-token position
+array is gathered; masking needs only ``lengths`` (and the optional
+sliding window over absolute positions). GQA is free the same way as in
+flash attention: kv heads are repeated only inside VMEM, never
+rematerialized in HBM.
+
+Contract: each live row has ``lengths[b] >= 1`` and a valid
+``tables[b, 0]``; the query is the token at position ``lengths[b]-1``
+whose own k/v is already resident. Rows with an all ``-1`` table (parked
+decode rows of a serving engine) produce finite garbage that the caller
+must discard — their pool writes were dropped upstream, so no live data
+is at risk.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                  softcap: float, block_size: int, nb: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                     # (H, hd)
+    k = k_ref[0]                                     # (bs, Hkv, hd)
+    v = v_ref[0]
+    H = q.shape[0]
+    hkv = k.shape[1]
+    if hkv != H:                                     # GQA: repeat in VMEM only
+        k = jnp.repeat(k, H // hkv, axis=1)
+        v = jnp.repeat(v, H // hkv, axis=1)
+    s = jax.lax.dot_general(
+        q, k.transpose(1, 0, 2), (((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale  # (H, bs)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # token positions are structural: table entry i holds [i*bs, (i+1)*bs)
+    tok = i * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (H, block_size), 1)
+    length = lengths_ref[b]
+    ok = (tok < length) & (tables_ref[b, i] >= 0)
+    if window > 0:
+        ok &= tok > (length - 1) - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot_general(
+                        p.astype(v.dtype), v.transpose(1, 0, 2),
+                        (((1,), (1,)), ((0,), (0,))),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(i == nb - 1)
+    def _emit():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "interpret"))
+def paged_attention_fwd(q, k_pages, v_pages, block_tables, lengths, *,
+                        window: int = 0, softcap: float = 0.0,
+                        interpret: bool = True):
+    """q: (B, H, hd); k_pages, v_pages: (P, bs, Hkv, hd) with H % Hkv == 0;
+    block_tables: (B, NB) int32 (-1 = absent); lengths: (B,) int32.
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    P, bs, Hkv, _ = k_pages.shape
+    assert H % Hkv == 0, (H, Hkv)
+    NB = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, window=window, softcap=softcap,
+        block_size=bs, nb=NB)
+
+    def kv_map(b, i, tables, lengths_):
+        # absent entries clamp to block 0; the kernel masks them out
+        return (jnp.maximum(tables[b, i], 0), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, NB),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, i, t, n: (b, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, hd), kv_map),
+            pl.BlockSpec((1, bs, Hkv, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, i, t, n: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the paged-attention decode kernel.
+
+Dense gather-then-softmax over the block table: the straightforward (and
+memory-hungry) computation the Pallas kernel must reproduce exactly in
+interpret mode. Also the cross-validation target for the model's
+block-table decode path (``transformer._paged_attn``).
+"""
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                        window: int = 0, softcap: float = 0.0):
+    """Single-token decode attention through per-request block tables.
+
+    q: (B, H, hd) — one query per request, the token at absolute position
+    ``lengths[b] - 1`` (its own k/v is already resident in the pages).
+    k_pages, v_pages: (P, bs, Hkv, hd) — the global KV block pool; block
+    ``p`` of a request's table holds its tokens ``[i*bs, (i+1)*bs)`` where
+    ``i`` is the table index mapping to ``p``.
+    block_tables: (B, NB) int32, ``-1`` marks absent table entries.
+    lengths: (B,) int32, valid resident tokens per request (>= 1).
+    Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    P, bs, Hkv, _ = k_pages.shape
+    NB = block_tables.shape[1]
+    if Hkv != H:
+        k_pages = jnp.repeat(k_pages, H // Hkv, axis=2)
+        v_pages = jnp.repeat(v_pages, H // Hkv, axis=2)
+    # gather each request's pages: (B, NB, bs, H, hd) -> (B, T, H, hd)
+    kg = jnp.take(k_pages, jnp.maximum(block_tables, 0).reshape(-1), axis=0)
+    vg = jnp.take(v_pages, jnp.maximum(block_tables, 0).reshape(-1), axis=0)
+    kg = kg.reshape(B, NB * bs, H, hd)
+    vg = vg.reshape(B, NB * bs, H, hd)
+
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                   kg.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    tok = jnp.arange(NB * bs)[None, :]                       # abs position
+    ok = tok < lengths[:, None]
+    ok &= jnp.repeat(block_tables >= 0, bs, axis=1)
+    if window > 0:
+        ok &= tok > (lengths[:, None] - 1) - window
+    s = jnp.where(ok[:, None, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bht,bthd->bhd", p, vg.astype(jnp.float32)
+                      ).astype(q.dtype)

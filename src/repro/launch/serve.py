@@ -13,6 +13,9 @@ and, for comparison, once more with monolithic prefill — the artifact
 records TTFT p50/p95 for both plus prefill compile counts on a
 mixed-prompt-length trace (chunked compiles are independent of the number
 of distinct prompt lengths; monolithic pays one XLA compile per length).
+A further comparison run swaps the slot pool for the *paged* KV substrate
+(DESIGN.md §9) at the exact same HBM budget and records bytes per
+resident token, peak concurrency and trace-level token identity.
 
 CPU demo:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
@@ -168,7 +171,8 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
                 engine: str = "both", ring: bool = False, eos_id: int = -1,
                 seed: int = 0, parity_check: bool = True,
                 prefill_chunk: int = 64, max_prefill_per_step: int = 2,
-                chunk_compare: bool = True) -> Dict:
+                chunk_compare: bool = True, paged_compare: bool = True,
+                block_size: int = 16) -> Dict:
     """Build the model once, warm the jits, then drive the trace through
     the requested engine(s). Returns the full measurement dict.
 
@@ -181,6 +185,14 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
     monolithic engine must still compile every *other* distinct prompt
     length mid-traffic, which is exactly the cost the chunked path
     removes (its chunk jit never sees a new shape).
+
+    With ``paged_compare`` (and an arch exposing the paged decode path)
+    the continuous engine runs once more over a *paged* KV pool sized to
+    the slot pool's HBM budget (``slots * cache_len`` tokens repartitioned
+    into ``block_size``-token blocks, request rows no longer the scarce
+    resource): the result records token-identity against the slot run,
+    resident KV bytes/token, and peak concurrent requests at equal HBM —
+    the paged engine must sustain strictly more.
     """
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     dtype = "float32" if smoke else "bfloat16"
@@ -210,30 +222,35 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
         cfg, 1, plens[0], seed=seed, compute_dtype=dtype).items()
         if k != "labels"}
 
-    def _drive_continuous(chunk: int) -> Dict[str, float]:
+    def _drive_continuous(chunk: int, kv_layout: str = "slot",
+                          num_blocks=None, n_rows=None):
         # the engine's default scheduler prices admissions with the
         # engine's own (cache_len-clamped) chunk size
         eng = ContinuousEngine(
-            model, params, cache_len=cache_len, num_slots=slots,
+            model, params, cache_len=cache_len, num_slots=n_rows or slots,
             eos_id=eos_id, prefill_chunk=chunk,
-            max_prefill_per_step=max_prefill_per_step)
+            max_prefill_per_step=max_prefill_per_step,
+            kv_layout=kv_layout, block_size=block_size,
+            num_blocks=num_blocks)
         # warm the jits on ONE prompt shape off the clock, then reset the
         # engine — warm requests must leave neither stale device slot
         # state nor accounting rows behind
-        eng.generate({k: np.concatenate([v] * min(2, slots))
+        eng.generate({k: np.concatenate([v] * min(2, eng.kv.num_slots))
                       for k, v in warm.items()}, 2)
         eng.reset()
         warm_compiles = eng.prefill_compiles
-        stats = drive_continuous(
-            eng, requests_from_trace(cfg, trace, dtype=dtype, seed=seed))
+        reqs = requests_from_trace(cfg, trace, dtype=dtype, seed=seed)
+        stats = drive_continuous(eng, reqs)
         stats["prefill_chunk"] = float(eng.prefill_chunk)
         stats["prefill_compiles_total"] = float(eng.prefill_compiles)
         stats["prefill_compiles_drive"] = float(
             eng.prefill_compiles - warm_compiles)
-        return stats
+        stats.update(eng.kv_accounting())
+        stats["block_deferrals"] = float(eng.scheduler.n_block_deferrals)
+        return stats, reqs
 
     if engine in ("continuous", "both"):
-        result["continuous"] = _drive_continuous(prefill_chunk)
+        result["continuous"], slot_reqs = _drive_continuous(prefill_chunk)
         # effective chunk size, read back from the engine (clamped to the
         # slot capacity; 0 when the model family has no chunk step) — the
         # artifact records real behavior, and a non-chunkable arch must
@@ -242,7 +259,7 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
         eff_chunk = int(result["continuous"]["prefill_chunk"])
         result["prefill_chunk"] = eff_chunk
         if eff_chunk and chunk_compare:
-            result["continuous_monolithic"] = _drive_continuous(0)
+            result["continuous_monolithic"], _ = _drive_continuous(0)
             c, m = result["continuous"], result["continuous_monolithic"]
             if "ttft_p95_s" in c and "ttft_p95_s" in m:
                 result["ttft_p95_chunked_s"] = c["ttft_p95_s"]
@@ -251,6 +268,32 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
                     c["ttft_p95_s"] < m["ttft_p95_s"])
             result["prefill_compiles_prompt_len_independent"] = bool(
                 c["prefill_compiles_total"] <= 1.0)
+        if (eff_chunk and paged_compare
+                and model.decode_step_paged is not None):
+            # equal-HBM paged run: repartition the slot pool's token
+            # capacity into leased blocks; request rows (cheap host state)
+            # stop being the scarce resource, blocks gate admission
+            nblocks = max(1, (slots * cache_len) // block_size)
+            rows = min(requests, nblocks)
+            result["continuous_paged"], paged_reqs = _drive_continuous(
+                prefill_chunk, kv_layout="paged", num_blocks=nblocks,
+                n_rows=rows)
+            c, p = result["continuous"], result["continuous_paged"]
+            result["block_size"] = block_size
+            result["paged_num_blocks"] = nblocks
+            result["paged_token_identical_trace"] = bool(all(
+                np.array_equal(a.output[:a.generated], b.output[:b.generated])
+                for a, b in zip(slot_reqs, paged_reqs)))
+            result["paged_hbm_within_budget"] = bool(
+                p["kv_bytes_total"] <= c["kv_bytes_total"])
+            result["paged_max_concurrency"] = p["peak_concurrent"]
+            result["slot_max_concurrency"] = c["peak_concurrent"]
+            result["paged_more_concurrent_verified"] = bool(
+                p["peak_concurrent"] > c["peak_concurrent"])
+            result["paged_bytes_per_resident_token"] = \
+                p["kv_bytes_per_resident_token"]
+            result["slot_bytes_per_resident_token"] = \
+                c["kv_bytes_per_resident_token"]
 
     if engine in ("static", "both"):
         seng = StaticEngine(model, params, cache_len=cache_len, eos_id=eos_id)
@@ -267,21 +310,35 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
 
     if parity_check:
         # parity at the LONGEST prompt length: a multi-chunk deposit must
-        # be token-identical to the monolithic static prefill
+        # be token-identical to the monolithic static prefill. The decode
+        # budget is capped by the trace's max_new ceiling — cache_len (and
+        # therefore the paged engine's admittable capacity) is sized to
+        # pmax + hi, so a fixed 8 would overflow it when hi < 8
         B = min(4, slots)
+        par_new = min(8, hi)
         pbatch = make_synthetic_batch(cfg, B, pmax, seed=seed + 1,
                                       compute_dtype=dtype)
         prompt = {k: np.asarray(v) for k, v in pbatch.items()
                   if k != "labels"}
         s_out = StaticEngine(model, params, cache_len=cache_len,
-                             eos_id=eos_id).generate(prompt, 8)
+                             eos_id=eos_id).generate(prompt, par_new)
         c_out = ContinuousEngine(model, params, cache_len=cache_len,
                                  num_slots=B, eos_id=eos_id,
                                  prefill_chunk=prefill_chunk,
                                  max_prefill_per_step=max_prefill_per_step,
-                                 ).generate(prompt, 8)
+                                 ).generate(prompt, par_new)
         result["parity_token_identical"] = bool(np.array_equal(s_out, c_out))
         result["parity_prompt_len"] = pmax
+        if (paged_compare and model.decode_step_paged is not None
+                and prefill_chunk):
+            p_out = ContinuousEngine(
+                model, params, cache_len=cache_len, num_slots=B,
+                eos_id=eos_id, prefill_chunk=prefill_chunk,
+                max_prefill_per_step=max_prefill_per_step,
+                kv_layout="paged",
+                block_size=block_size).generate(prompt, par_new)
+            result["parity_token_identical_paged"] = bool(
+                np.array_equal(s_out, p_out))
     return result
 
 
@@ -303,6 +360,10 @@ def main():
                     help="chunk-rows batched into one prefill dispatch")
     ap.add_argument("--no-chunk-compare", action="store_true",
                     help="skip the monolithic-prefill comparison run")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="tokens per KV block for the paged comparison run")
+    ap.add_argument("--no-paged-compare", action="store_true",
+                    help="skip the paged-KV comparison run")
     ap.add_argument("--max-new-lo", type=int, default=4)
     ap.add_argument("--max-new-hi", type=int, default=32)
     ap.add_argument("--arrival", default="poisson",
@@ -328,13 +389,16 @@ def main():
         engine=args.engine, ring=args.ring, eos_id=args.eos_id,
         seed=args.seed, prefill_chunk=args.prefill_chunk,
         max_prefill_per_step=args.max_prefill_per_step,
-        chunk_compare=not args.no_chunk_compare)
+        chunk_compare=not args.no_chunk_compare,
+        paged_compare=not args.no_paged_compare,
+        block_size=args.kv_block_size)
 
     print(f"arch={result['arch']} requests={result['requests']} "
           f"slots={result['slots']} cache_len={result['cache_len']} "
           f"prompt_len={result['prompt_len']} "
           f"prefill_chunk={result['prefill_chunk']}")
-    for name in ("static", "continuous_monolithic", "continuous"):
+    for name in ("static", "continuous_monolithic", "continuous",
+                 "continuous_paged"):
         if name in result:
             m = result[name]
             ttft = (f"  ttft_p95 {m['ttft_p95_s'] * 1e3:.0f}ms"
@@ -355,12 +419,22 @@ def main():
               f"(improved={result['chunked_ttft_p95_improved']}, "
               f"compile-count prompt-len independent="
               f"{result.get('prefill_compiles_prompt_len_independent')})")
+    if "paged_max_concurrency" in result:
+        print(f"      paged: {result['paged_max_concurrency']:.0f} vs "
+              f"{result['slot_max_concurrency']:.0f} peak concurrent at "
+              f"equal HBM (block={result['block_size']} tok x "
+              f"{result['paged_num_blocks']} blocks; more_concurrent="
+              f"{result['paged_more_concurrent_verified']}, "
+              f"bytes/resident-tok {result['paged_bytes_per_resident_token']:.0f}"
+              f" vs {result['slot_bytes_per_resident_token']:.0f}, "
+              f"token_identical={result['paged_token_identical_trace']})")
     if "parity_token_identical" in result:
         print(f"     parity: token_identical="
               f"{result['parity_token_identical']} "
+              f"paged={result.get('parity_token_identical_paged')} "
               f"(prompt_len={result.get('parity_prompt_len')})")
     if args.json:
-        payload = {"schema": "repro-serve-bench-v2", **result}
+        payload = {"schema": "repro-serve-bench-v3", **result}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"wrote {args.json}")

@@ -32,6 +32,12 @@ class Model(NamedTuple):
     # families that must prefill monolithically (SSM/hybrid state threading,
     # modality frontends, encoder-decoder)
     prefill_chunk: Any = None
+    # paged KV (block-table) serving paths — None for families without a
+    # parity-safe chunked deposit (the paged engine always streams prompts
+    # chunk-by-chunk) or with non-attention decode state to page
+    init_paged_cache: Any = None
+    decode_step_paged: Any = None
+    prefill_chunk_paged: Any = None
 
 
 def _knobs(train: TrainConfig, serve: ServeConfig,
@@ -88,7 +94,18 @@ def build_model(cfg: ModelConfig, train: TrainConfig = None,
                                    dtype or dtype_of(knobs["compute_dtype"]))),
         knobs=knobs, tp=tp,
         prefill_chunk=(transformer.make_prefill_chunk(cfg, knobs, tp)
-                       if chunkable else None))
+                       if chunkable else None),
+        init_paged_cache=(
+            (lambda num_blocks, block_size, dtype=None:
+             transformer.init_paged_cache(
+                 cfg, num_blocks, block_size, tp,
+                 dtype or dtype_of(knobs["compute_dtype"])))
+            if chunkable else None),
+        decode_step_paged=(transformer.make_decode_step_paged(cfg, knobs, tp)
+                           if chunkable else None),
+        prefill_chunk_paged=(
+            transformer.make_prefill_chunk_paged(cfg, knobs, tp)
+            if chunkable else None))
 
 
 # ---------------------------------------------------------------------------

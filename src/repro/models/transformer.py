@@ -221,6 +221,21 @@ def lm_head_weight(cfg, params):
     return params["lm_head"]
 
 
+def _layer_slice(tree, idx):
+    """One layer's slice of a stacked (L, ...) cache pytree — shared by
+    every cache-carrying scan (decode, chunked prefill, paged paths)."""
+    return jax.tree_util.tree_map(
+        lambda c: lax.dynamic_index_in_dim(c, idx, 0, keepdims=False), tree)
+
+
+def _layer_put(tree, new, idx):
+    """Write one layer's updated entries back into the stacked cache
+    (in-place under XLA's while-loop aliasing; see make_decode_step)."""
+    return jax.tree_util.tree_map(
+        lambda c, n: lax.dynamic_update_index_in_dim(
+            c, n.astype(c.dtype), idx, 0), tree, new)
+
+
 # ---------------------------------------------------------------------------
 # Public entry points (decoder-only; enc-dec lives in encdec.py)
 # ---------------------------------------------------------------------------
@@ -335,6 +350,32 @@ def make_prefill(cfg: ModelConfig, knobs, tp: int):
     return prefill
 
 
+def _masked_group_attention(cfg, p, q, keys, values, okay, out_dtype):
+    """Shared grouped-attention core of the slot (ring) and paged
+    (block-table) cached-attention paths: grouped scores, softcap,
+    additive NEG_INF mask, softmax, context, output projection. The two
+    paths differ only in how keys/values/mask are produced — the math
+    here MUST stay one copy or a softcap/masking fix could silently
+    diverge them and break the token-parity guarantee CI asserts.
+
+    q (B,C,H,hd); keys/values (B,T,Gs,hd); okay broadcastable to
+    (B,C,T).
+    """
+    B, C = q.shape[0], q.shape[1]
+    gs = keys.shape[2]
+    R = cfg.num_heads // gs
+    qg = q.reshape(B, C, gs, R, cfg.head_dim)
+    s = jnp.einsum("bqgrk,btgk->bgrqt", qg, keys).astype(jnp.float32)
+    s = s / math.sqrt(cfg.head_dim)
+    if cfg.logit_softcap > 0:
+        s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
+    s = s + jnp.where(okay, 0.0, L.NEG_INF)[:, None, None, :, :]
+    prob = jax.nn.softmax(s, axis=-1).astype(out_dtype)
+    ctx = jnp.einsum("bgrqt,btgk->bqgrk", prob, values)
+    ctx = ctx.reshape(B, C, cfg.num_heads, cfg.head_dim)
+    return L.attn_output(p, ctx, out_dtype)
+
+
 def _cached_attn(cfg, p, xn, layer_cache, qpos, wslot, is_global):
     """Attention for query tokens against (and into) the cache — the
     shared core of single-token decode and chunked prefill.
@@ -349,9 +390,6 @@ def _cached_attn(cfg, p, xn, layer_cache, qpos, wslot, is_global):
     whole updated cache, causally masked on the stored absolute
     positions — earlier chunks of the same prompt are just cache entries.
     """
-    B = xn.shape[0]
-    C = xn.shape[1]
-    W = layer_cache["k"].shape[1]
     gs = layer_cache["k"].shape[2]
     q, k, v = L.project_qkv(p, xn, cfg, qpos)
     kc = L.repeat_kv(k, gs)
@@ -361,23 +399,13 @@ def _cached_attn(cfg, p, xn, layer_cache, qpos, wslot, is_global):
     new_pos = layer_cache["pos"].at[wslot].set(
         qpos.astype(jnp.int32), mode="drop")
 
-    # grouped attention: q (B,C,Gs,R,hd) x cache (B,W,Gs,hd)
-    R = cfg.num_heads // gs
-    qg = q.reshape(B, C, gs, R, cfg.head_dim)
-    s = jnp.einsum("bqgrk,btgk->bgrqt", qg, new_k).astype(jnp.float32)
-    s = s / math.sqrt(cfg.head_dim)
-    if cfg.logit_softcap > 0:
-        s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
     kpos = new_pos  # (W,)
     okay = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])  # (C, W)
     if cfg.swa_window > 0:
         win_ok = kpos[None, :] > qpos[:, None] - cfg.swa_window
         okay = okay & jnp.where(is_global, True, win_ok)
-    s = s + jnp.where(okay, 0.0, L.NEG_INF)[None, None, None, :, :]
-    prob = jax.nn.softmax(s, axis=-1).astype(xn.dtype)
-    ctx = jnp.einsum("bgrqt,btgk->bqgrk", prob, new_v)
-    ctx = ctx.reshape(B, C, cfg.num_heads, cfg.head_dim)
-    out = L.attn_output(p, ctx, xn.dtype)
+    out = _masked_group_attention(cfg, p, q, new_k, new_v, okay[None],
+                                  xn.dtype)
     return out, {"k": new_k, "v": new_v, "pos": new_pos}
 
 
@@ -405,20 +433,10 @@ def make_decode_step(cfg: ModelConfig, knobs, tp: int):
         """
         x = embed_tokens(cfg, params, token, compute_dtype)
 
-        def layer_slice(tree, idx):
-            return jax.tree_util.tree_map(
-                lambda c: lax.dynamic_index_in_dim(c, idx, 0, keepdims=False),
-                tree)
-
-        def layer_put(tree, new, idx):
-            return jax.tree_util.tree_map(
-                lambda c, n: lax.dynamic_update_index_in_dim(
-                    c, n.astype(c.dtype), idx, 0), tree, new)
-
         def body(carry, xs):
             h, cch = carry
             p_l, flag, idx = xs
-            cache_l = layer_slice(cch, idx)
+            cache_l = _layer_slice(cch, idx)
             new_cache: Dict[str, Any] = {}
             xn = L.apply_norm(h, p_l["ln1"], cfg)
             if cfg.block == BLOCK_SSM:
@@ -450,7 +468,7 @@ def make_decode_step(cfg: ModelConfig, knobs, tp: int):
                 m_out, _ = moe.moe_apply(p_l["moe"],
                                          L.apply_norm(h, p_l["ln2"], cfg), cfg)
                 h = h + m_out
-            return (h, layer_put(cch, new_cache, idx)), None
+            return (h, _layer_put(cch, new_cache, idx)), None
 
         (x, new_cache), _ = lax.scan(
             body, (x, cache),
@@ -467,6 +485,150 @@ def make_decode_step(cfg: ModelConfig, knobs, tp: int):
 # ---------------------------------------------------------------------------
 # Chunked prefill (fixed-shape prompt deposit for continuous serving)
 # ---------------------------------------------------------------------------
+
+# ---------------------------------------------------------------------------
+# Paged KV: block-table cache (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     tp: int, compute_dtype):
+    """Global KV block pool: (L, P, bs, Gs, hd) per k/v. One block table
+    entry maps a request's token range [i*bs, (i+1)*bs) onto a pool
+    block shared across all layers, so positions are structural — no
+    per-token position array is stored (the slot cache needs one for its
+    ring addressing; the paged cache does not)."""
+    if cfg.block != BLOCK_DENSE or cfg.frontend != "none":
+        raise ValueError("paged KV supports dense attention blocks without "
+                         f"a modality frontend (got block={cfg.block!r}, "
+                         f"frontend={cfg.frontend!r})")
+    gs = kv_store_heads(cfg, tp)
+    shape = (cfg.num_layers, num_blocks, block_size, gs, cfg.head_dim)
+    return {"k": jnp.zeros(shape, compute_dtype),
+            "v": jnp.zeros(shape, compute_dtype)}
+
+
+def _paged_attn(cfg, p, xn, layer_cache, tables, qpos, wvalid, is_global):
+    """Attention for query tokens against (and into) the paged pool — the
+    block-table analogue of :func:`_cached_attn`, batched across requests.
+
+    xn (B,C,d); layer_cache k/v (P,bs,Gs,hd) — ONE pool shared by every
+    request; tables (B,NB) int32 block tables (-1 = absent entry); qpos
+    (B,C) absolute query positions (per row — requests decode at
+    different depths); wvalid (B,C) marks queries allowed to write their
+    k/v (chunk padding and parked rows are not).
+
+    Writes scatter each query's k/v into block ``tables[b, qpos//bs]`` at
+    offset ``qpos % bs`` — parked/padded queries aim at the out-of-range
+    block index ``P`` and the explicit ``mode="drop"`` discards them
+    (default scatter semantics would wraparound-corrupt a live block).
+    Queries then attend over their own gathered pages, causally masked on
+    the *structural* positions (table entry i holds tokens [i*bs,
+    (i+1)*bs)) — stale pages of a block's previous owner are never at a
+    position <= qpos of the new owner, so block recycling needs no
+    blanking dispatch.
+    """
+    B = xn.shape[0]
+    P, bs, gs, hd = layer_cache["k"].shape
+    NB = tables.shape[1]
+    q, k, v = L.project_qkv(p, xn, cfg, qpos)        # per-row rope positions
+    kc = L.repeat_kv(k, gs)
+    vc = L.repeat_kv(v, gs)
+    blk = jnp.take_along_axis(tables, jnp.clip(qpos // bs, 0, NB - 1), axis=1)
+    wblk = jnp.where(wvalid & (blk >= 0), blk, P)    # P = drop block
+    woff = jnp.where(wvalid, qpos % bs, 0)
+    new_k = layer_cache["k"].at[wblk, woff].set(kc, mode="drop")
+    new_v = layer_cache["v"].at[wblk, woff].set(vc, mode="drop")
+
+    # gather this batch's pages: (B, NB*bs, Gs, hd), token t at index t
+    flat = jnp.maximum(tables, 0).reshape(-1)
+    kg = jnp.take(new_k, flat, axis=0).reshape(B, NB * bs, gs, hd)
+    vg = jnp.take(new_v, flat, axis=0).reshape(B, NB * bs, gs, hd)
+
+    kpos = jnp.arange(NB * bs)                        # structural positions
+    okay = (kpos[None, None, :] <= qpos[:, :, None]) \
+        & jnp.repeat(tables >= 0, bs, axis=1)[:, None, :]
+    if cfg.swa_window > 0:
+        win_ok = kpos[None, None, :] > qpos[:, :, None] - cfg.swa_window
+        okay = okay & jnp.where(is_global, True, win_ok)
+    out = _masked_group_attention(cfg, p, q, kg, vg, okay, xn.dtype)
+    return out, {"k": new_k, "v": new_v}
+
+
+def _paged_backbone(cfg, params, x, tables, qpos, wvalid, cache, flags):
+    """Scan the dense blocks over the paged pool (cache rides the scan
+    carry exactly like :func:`make_decode_step` — XLA aliases the donated
+    pool end-to-end)."""
+    def body(carry, xs):
+        h, cch = carry
+        p_l, flag, idx = xs
+        cache_l = _layer_slice(cch, idx)
+        xn = L.apply_norm(h, p_l["ln1"], cfg)
+        a_out, a_cache = _paged_attn(cfg, p_l["attn"], xn, cache_l,
+                                     tables, qpos, wvalid, flag)
+        h = h + a_out
+        h = h + L.mlp_apply(p_l["mlp"],
+                            L.apply_norm(h, p_l["ln2"], cfg), cfg)
+        return (h, _layer_put(cch, a_cache, idx)), None
+
+    (x, new_cache), _ = lax.scan(
+        body, (x, cache),
+        (params["blocks"], flags, jnp.arange(cfg.num_layers)))
+    return L.apply_norm(x, params["final_norm"], cfg), new_cache
+
+
+def make_decode_step_paged(cfg: ModelConfig, knobs, tp: int):
+    """Batched one-token decode through per-request block tables: the
+    whole request-row batch advances in one call (no outer vmap — the
+    pool is one shared buffer, so rows are batched natively with per-row
+    positions). A negative (parked) position writes nothing and yields a
+    garbage row the engine discards."""
+    compute_dtype = L.dtype_of(knobs["compute_dtype"])
+    flags = layer_flags(cfg)
+
+    def decode_step(params, cache, tokens, positions, block_tables):
+        """tokens (B,1) int32, positions (B,) int32, block_tables (B,NB)
+        int32 -> (logits (B,Vp), cache)."""
+        x = embed_tokens(cfg, params, tokens, compute_dtype)
+        qpos = positions[:, None]                     # (B, 1)
+        wvalid = (positions >= 0)[:, None]
+        x, new_cache = _paged_backbone(cfg, params, x, block_tables, qpos,
+                                       wvalid, cache, flags)
+        w_out = lm_head_weight(cfg, params).astype(compute_dtype)
+        logits = (x[:, 0, :] @ w_out).astype(jnp.float32)
+        vocab_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        return jnp.where(vocab_ok, logits, L.NEG_INF), new_cache
+
+    return decode_step
+
+
+def make_prefill_chunk_paged(cfg: ModelConfig, knobs, tp: int):
+    """Fixed-shape chunked prompt deposit through block tables: up to B
+    chunk-rows from different requests write straight into the shared
+    pool (no gather/scatter of slot rows — the block table IS the
+    indirection). Padding rows carry an all ``-1`` table and
+    ``n_valid == 0``: every write drops, and their logits are garbage the
+    engine aims at its drop row."""
+    compute_dtype = L.dtype_of(knobs["compute_dtype"])
+    flags = layer_flags(cfg)
+
+    def prefill_chunk(params, cache, tokens, block_tables, pos0, n_valid):
+        """tokens (B,C) int32; block_tables (B,NB); pos0, n_valid (B,)
+        -> (last-valid-position logits (B,Vp), cache)."""
+        B, C = tokens.shape
+        x = embed_tokens(cfg, params, tokens, compute_dtype)
+        qpos = pos0[:, None] + jnp.arange(C)[None, :]
+        wvalid = jnp.arange(C)[None, :] < n_valid[:, None]
+        x, new_cache = _paged_backbone(cfg, params, x, block_tables, qpos,
+                                       wvalid, cache, flags)
+        last = jnp.clip(n_valid - 1, 0, C - 1)
+        hidden = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+        w_out = lm_head_weight(cfg, params).astype(compute_dtype)
+        logits = (hidden @ w_out).astype(jnp.float32)
+        vocab_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        return jnp.where(vocab_ok, logits, L.NEG_INF), new_cache
+
+    return prefill_chunk
+
 
 def _chunk_attn(cfg, p, xn, layer_cache, qpos, valid, is_global):
     """Attention for a prompt chunk against (and into) the cache:
@@ -510,27 +672,17 @@ def make_prefill_chunk(cfg: ModelConfig, knobs, tp: int):
         qpos = pos0 + jnp.arange(C)
         valid = jnp.arange(C) < n_valid
 
-        def layer_slice(tree, idx):
-            return jax.tree_util.tree_map(
-                lambda c: lax.dynamic_index_in_dim(c, idx, 0, keepdims=False),
-                tree)
-
-        def layer_put(tree, new, idx):
-            return jax.tree_util.tree_map(
-                lambda c, n: lax.dynamic_update_index_in_dim(
-                    c, n.astype(c.dtype), idx, 0), tree, new)
-
         def body(carry, xs):
             h, cch = carry
             p_l, flag, idx = xs
-            cache_l = layer_slice(cch, idx)
+            cache_l = _layer_slice(cch, idx)
             xn = L.apply_norm(h, p_l["ln1"], cfg)
             a_out, a_cache = _chunk_attn(cfg, p_l["attn"], xn, cache_l,
                                          qpos, valid, flag)
             h = h + a_out
             h = h + L.mlp_apply(p_l["mlp"],
                                 L.apply_norm(h, p_l["ln2"], cfg), cfg)
-            return (h, layer_put(cch, a_cache, idx)), None
+            return (h, _layer_put(cch, a_cache, idx)), None
 
         (x, new_cache), _ = lax.scan(
             body, (x, cache),

@@ -1,3 +1,4 @@
+from repro.serve.block_pool import BlockPool, PagedKVCache  # noqa: F401
 from repro.serve.engine import ContinuousEngine, Engine, StaticEngine  # noqa: F401
 from repro.serve.kv_cache import SlotError, SlotKVCache  # noqa: F401
 from repro.serve.scheduler import (CellQueueScheduler, ServeRequest,  # noqa: F401

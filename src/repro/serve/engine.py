@@ -6,8 +6,16 @@ decode every row in lockstep until all are done. It stays as the parity
 and throughput baseline.
 
 ``ContinuousEngine`` interleaves prefill and decode *micro-steps* over a
-fixed pool of KV slots (:mod:`repro.serve.kv_cache`): each host step
-admits requests from the cell-queue scheduler
+fixed pool of KV slots (:mod:`repro.serve.kv_cache`) — or, with
+``kv_layout="paged"``, over a global pool of fixed-size KV *blocks*
+leased through per-request block tables
+(:mod:`repro.serve.block_pool`, DESIGN.md §9): admission then gates on
+free blocks instead of free slots, prompts deposit chunk-by-chunk
+through the tables, and decode is the model's batched block-table step
+(`decode_step_paged`; the same computation's TPU hot-path kernel is
+``kernels/paged_attention`` — a standalone validated artifact like
+flash_attention, not yet dispatched from the model path).
+Each host step admits requests from the cell-queue scheduler
 (:mod:`repro.serve.scheduler`), deposits their prompts, then advances
 every live slot by one token. Decode over the pool is a single jit'd
 ``vmap`` of the model's ``decode_step`` with *per-slot* positions and
@@ -52,6 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.block_pool import PagedKVCache
 from repro.serve.kv_cache import SlotKVCache
 from repro.serve.scheduler import CellQueueScheduler, ServeRequest
 
@@ -170,13 +179,17 @@ class ContinuousEngine:
     def __init__(self, model, params, *, cache_len: int, num_slots: int,
                  eos_id: int = -1, scheduler: Optional[CellQueueScheduler] = None,
                  comm=None, max_prefill_per_step: int = 1,
-                 prefill_chunk: int = 64):
+                 prefill_chunk: int = 64, kv_layout: str = "slot",
+                 block_size: int = 16, num_blocks: Optional[int] = None):
+        if kv_layout not in ("slot", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r} "
+                             "(expected 'slot' or 'paged')")
         self.model = model
         self.params = params
         self.cache_len = cache_len
         self.eos_id = eos_id
         self.max_prefill_per_step = max(1, int(max_prefill_per_step))
-        self.kv = SlotKVCache(model, cache_len, num_slots)
+        self.kv_layout = kv_layout
         # chunked prompt deposit needs the model's fixed-shape chunk step;
         # families without a parity-safe one (SSM/hybrid, MoE routing,
         # frontends, enc-dec) fall back to monolithic prefill
@@ -184,9 +197,30 @@ class ContinuousEngine:
                               if (prefill_chunk
                                   and getattr(model, "prefill_chunk", None)
                                   is not None) else 0)
+        if kv_layout == "paged":
+            if getattr(model, "decode_step_paged", None) is None:
+                raise ValueError(
+                    "paged KV needs the model's block-table decode path "
+                    "(dense attention, no frontend) — this arch has none")
+            if not self.prefill_chunk:
+                raise ValueError("paged KV deposits prompts chunk-by-chunk;"
+                                 " prefill_chunk must be > 0")
+            # equal-HBM default: the same token capacity the slot pool
+            # would reserve, repartitioned into leased blocks
+            mbr = -(-int(cache_len) // int(block_size))
+            nblocks = (int(num_blocks) if num_blocks
+                       else -(-num_slots * int(cache_len) // int(block_size)))
+            self.kv = PagedKVCache(model, num_blocks=nblocks,
+                                   block_size=int(block_size),
+                                   num_slots=num_slots,
+                                   max_blocks_per_req=mbr)
+        else:
+            self.kv = SlotKVCache(model, cache_len, num_slots)
         self.scheduler = scheduler or CellQueueScheduler(
             num_cells=4 * num_slots,
-            prefill_chunk_bytes=4 * self.prefill_chunk)
+            prefill_chunk_bytes=4 * self.prefill_chunk,
+            block_bytes=(4 * int(block_size)
+                         if kv_layout == "paged" else 0))
         if comm is not None:
             self._prefill_stream = comm.stream("prefill")
             self._decode_stream = comm.stream("decode")
@@ -205,18 +239,21 @@ class ContinuousEngine:
             self.prefill_compiles += 1
             return model.prefill(p, b, cache_len)
 
-        decode_fn = self._decode_impl(model)
+        decode_fn = (self._decode_impl_paged(model)
+                     if kv_layout == "paged" else self._decode_impl(model))
 
-        def _decode_traced(p, buf, state):
+        def _decode_traced(p, buf, state, *rest):
             self.decode_compiles += 1
-            return decode_fn(p, buf, state)
+            return decode_fn(p, buf, state, *rest)
 
         self._prefill = jax.jit(_prefill_traced)
         self._decode = jax.jit(_decode_traced, donate_argnums=(1, 2))
         self._admit_state = jax.jit(self._admit_impl, donate_argnums=(0,))
         self._park_state = jax.jit(self._park_impl, donate_argnums=(0,))
         if self.prefill_chunk:
-            chunk_fn = self._chunk_impl(model, num_slots)
+            chunk_fn = (self._chunk_impl_paged(model, num_slots)
+                        if kv_layout == "paged"
+                        else self._chunk_impl(model, num_slots))
 
             def _chunk_traced(p, buf, state, *rest):
                 self.prefill_compiles += 1
@@ -238,6 +275,13 @@ class ContinuousEngine:
         self._slot_req: List[Optional[ServeRequest]] = [None] * S
         self._slot_out: List[Optional[np.ndarray]] = [None] * S
 
+        # serving accounting: peak in-flight requests plus resident-vs-
+        # reserved token sums — the slot-vs-paged HBM-efficiency evidence
+        # the traffic driver reports (bytes pinned per resident token)
+        self.peak_live = 0
+        self._resident_tok_sum = 0
+        self._reserved_tok_sum = 0
+
     @staticmethod
     def _fresh_state(S: int):
         return {
@@ -248,18 +292,27 @@ class ContinuousEngine:
         }
 
     @staticmethod
-    def _decode_impl(model):
+    def _advance_state(state, logits):
+        """Shared decode tail of the slot and paged dispatches: sample
+        each row with its own key chain and advance (tok, pos, keys).
+        MUST stay one copy — a sampling fix applied to one layout only
+        would silently diverge their token streams and break the
+        slot-vs-paged parity CI asserts. logits (S, Vp)."""
+        split = jax.vmap(jax.random.split)(state["keys"])      # (S, 2, 2)
+        nxt = _sample_rows(logits, split[:, 1], state["temp"])
+        return nxt, {"tok": nxt.reshape(-1, 1, 1),
+                     "pos": state["pos"] + 1,
+                     "keys": split[:, 0],
+                     "temp": state["temp"]}
+
+    @classmethod
+    def _decode_impl(cls, model):
         vstep = jax.vmap(model.decode_step, in_axes=(None, 0, 0, 0))
 
         def fn(params, buf, state):
             logits, buf = vstep(params, buf, state["tok"],
                                 state["pos"])            # logits (S, 1, Vp)
-            split = jax.vmap(jax.random.split)(state["keys"])  # (S, 2, 2)
-            nxt = _sample_rows(logits[:, 0, :], split[:, 1], state["temp"])
-            state = {"tok": nxt.reshape(-1, 1, 1),
-                     "pos": state["pos"] + 1,
-                     "keys": split[:, 0],
-                     "temp": state["temp"]}
+            nxt, state = cls._advance_state(state, logits[:, 0, :])
             return nxt, buf, state
 
         return fn
@@ -285,15 +338,35 @@ class ContinuousEngine:
         return {**state, "pos": state["pos"].at[slot].set(PARK_POS)}
 
     @staticmethod
-    def _chunk_impl(model, num_slots):
+    def _install_finalized_rows(state, logits, rows, fin_pos, keys, temps,
+                                drop_row):
+        """Shared chunked-prefill tail of the slot and paged dispatches:
+        sample the first token of every chunk-row and install the decode
+        state of rows whose prompt just completed (``fin_pos >= 0``) —
+        exactly as monolithic admission would; non-final and padding rows
+        aim at ``drop_row`` and write nothing. One copy for both layouts,
+        for the same parity reason as :meth:`_advance_state`."""
+        split = jax.vmap(jax.random.split)(keys)          # (P, 2, 2)
+        tok0 = _sample_rows(logits, split[:, 1], temps)   # (P,)
+        fin = fin_pos >= 0
+        trow = jnp.where(fin, rows, drop_row)             # drop non-final
+        state = {
+            "tok": state["tok"].at[trow].set(
+                tok0.reshape(-1, 1, 1), mode="drop"),
+            "pos": state["pos"].at[trow].set(fin_pos, mode="drop"),
+            "keys": state["keys"].at[trow].set(split[:, 0], mode="drop"),
+            "temp": state["temp"].at[trow].set(temps, mode="drop"),
+        }
+        return state, tok0
+
+    @classmethod
+    def _chunk_impl(cls, model, num_slots):
         """One fused chunked-prefill dispatch over up to P chunk-rows from
         different requests: gather their slot rows, run the model's
         fixed-shape ``prefill_chunk`` vmapped across rows, scatter the
-        rows back, and — for rows whose prompt just completed
-        (``fin_pos >= 0``) — sample the first token and install the
-        slot's decode state, exactly as monolithic admission would.
-        Padding rows carry ``slots == num_slots``: the gather clamps and
-        every write drops."""
+        rows back, then the shared finalize tail. Padding rows carry
+        ``slots == num_slots``: the gather clamps and every write
+        drops."""
         vchunk = jax.vmap(model.prefill_chunk, in_axes=(None, 0, 0, 0, 0))
 
         def fn(params, buf, state, tokens, slots, pos0, n_valid, fin_pos,
@@ -301,24 +374,65 @@ class ContinuousEngine:
             rows = SlotKVCache.rows_at(buf, slots)
             logits, new_rows = vchunk(params, rows, tokens, pos0, n_valid)
             buf = SlotKVCache.rows_into(buf, new_rows, slots)
-            split = jax.vmap(jax.random.split)(keys)          # (P, 2, 2)
-            tok0 = _sample_rows(logits, split[:, 1], temps)   # (P,)
-            fin = fin_pos >= 0
-            tslot = jnp.where(fin, slots, num_slots)          # drop non-final
-            state = {
-                "tok": state["tok"].at[tslot].set(
-                    tok0.reshape(-1, 1, 1), mode="drop"),
-                "pos": state["pos"].at[tslot].set(fin_pos, mode="drop"),
-                "keys": state["keys"].at[tslot].set(split[:, 0], mode="drop"),
-                "temp": state["temp"].at[tslot].set(temps, mode="drop"),
-            }
+            state, tok0 = cls._install_finalized_rows(
+                state, logits, slots, fin_pos, keys, temps, num_slots)
+            return buf, state, tok0
+
+        return fn
+
+    @classmethod
+    def _decode_impl_paged(cls, model):
+        """One decode micro-step over the paged pool: the model's batched
+        block-table decode (no outer vmap — the pool is one shared
+        buffer), then the same in-jit sampling tail as the slot path."""
+        def fn(params, buf, state, tables):
+            logits, buf = model.decode_step_paged(
+                params, buf, state["tok"][:, 0], state["pos"],
+                tables)                                # logits (S, Vp)
+            nxt, state = cls._advance_state(state, logits)
+            return nxt, buf, state
+
+        return fn
+
+    @classmethod
+    def _chunk_impl_paged(cls, model, num_slots):
+        """One fused chunked-prefill dispatch through block tables: up to
+        P chunk-rows write straight into the shared pool (the table IS
+        the indirection — no slot-row gather/scatter), then the shared
+        finalize tail. Padding rows carry an all ``-1`` table (writes
+        drop) and ``rows == num_slots`` (state installs drop)."""
+        def fn(params, buf, state, tokens, rows, tables, pos0, n_valid,
+               fin_pos, keys, temps):
+            logits, buf = model.prefill_chunk_paged(
+                params, buf, tokens, tables, pos0, n_valid)
+            state, tok0 = cls._install_finalized_rows(
+                state, logits, rows, fin_pos, keys, temps, num_slots)
             return buf, state, tok0
 
         return fn
 
     # -- request intake ----------------------------------------------------
     def submit(self, req: ServeRequest, now: float = 0.0) -> str:
-        """Queue a request through the cell-queue scheduler."""
+        """Queue a request through the cell-queue scheduler. A paged
+        request whose token budget can never fit its block-table is
+        rejected here, at submit — not discovered as a crash in the
+        admission gate once it reaches the queue head."""
+        if self.kv_layout == "paged":
+            budget = self._token_budget(req)
+            # a lease must fit BOTH caps: the per-request table and the
+            # whole pool — a request needing more blocks than exist would
+            # otherwise be accepted and livelock admission (head-of-line
+            # deferral that can never clear)
+            nb = min(self.kv.max_blocks_per_req, self.kv.pool.num_blocks)
+            cap = nb * self.kv.block_size
+            if budget > cap:
+                raise ValueError(
+                    f"request {req.rid}: prompt+max_new = {budget} tokens "
+                    f"exceeds the admittable capacity {cap} (= min(table "
+                    f"cap {self.kv.max_blocks_per_req}, pool "
+                    f"{self.kv.pool.num_blocks}) blocks x "
+                    f"{self.kv.block_size}); raise cache_len/num_blocks "
+                    "or lower max_new_tokens")
         return self.scheduler.submit(req, now)
 
     @property
@@ -352,8 +466,20 @@ class ContinuousEngine:
             # stalls are bounded by one chunk of prefill compute
             budget = min(self.kv.num_free,
                          self.max_prefill_per_step - len(self._prefilling))
-            for req in self.scheduler.admit(now, budget):
-                self._begin_prefill(req)
+            # paged: the second admission gate is the block pool — a
+            # request is held back (head-of-line) until its whole token
+            # budget (prompt + max_new) fits in free blocks. Admit one
+            # request at a time so each lease is debited from the free
+            # pool before the next candidate is gated.
+            can = ((lambda r: self.kv.can_admit(
+                self._token_budget(r))) if self.kv_layout == "paged"
+                else None)
+            while budget > 0:
+                admitted = self.scheduler.admit(now, 1, can_admit=can)
+                if not admitted:
+                    break
+                self._begin_prefill(admitted[0])
+                budget -= 1
             if self._prefilling:
                 finished.extend(self._prefill_chunk_step(now))
         else:
@@ -364,14 +490,62 @@ class ContinuousEngine:
                     finished.append(done)
         if self.num_decoding:
             finished.extend(self._decode_micro_step(now))
+        self._account()
         return finished
+
+    def _token_budget(self, req: ServeRequest) -> int:
+        """Token capacity a request leases at admission: the prompt plus
+        every token it may generate (no mid-decode block exhaustion)."""
+        return req.prompt_len + req.max_new_tokens
+
+    def _account(self) -> None:
+        live = self.kv.num_live
+        self.peak_live = max(self.peak_live, live)
+        if live:
+            self._resident_tok_sum += int(self.kv.lengths.sum())
+            self._reserved_tok_sum += (
+                self.kv.resident_capacity_tokens
+                if self.kv_layout == "paged" else live * self.cache_len)
+
+    def kv_accounting(self) -> dict:
+        """HBM-efficiency evidence for the traffic driver: total pool
+        bytes, bytes pinned per resident token (time-averaged over
+        non-idle steps), and peak concurrent in-flight requests."""
+        if self.kv_layout == "paged":
+            total = self.kv.kv_bytes
+            cap_tokens = self.kv.capacity_tokens
+        else:
+            total = int(sum(x.nbytes for x in
+                            jax.tree_util.tree_leaves(self.kv.buffers)))
+            cap_tokens = self.kv.num_slots * self.cache_len
+        per_tok = total / max(1, cap_tokens)
+        resident = max(1, self._resident_tok_sum)
+        return {
+            "kv_layout": self.kv_layout,
+            "kv_bytes_total": float(total),
+            "kv_capacity_tokens": float(cap_tokens),
+            "kv_bytes_per_token": per_tok,
+            # reserved/resident > 1 is over-reservation: HBM pinned for
+            # tokens that are not there (the slot pool's cache_len rounding)
+            "kv_reserved_over_resident": self._reserved_tok_sum / resident,
+            "kv_bytes_per_resident_token":
+                per_tok * self._reserved_tok_sum / resident,
+            "peak_concurrent": float(self.peak_live),
+        }
 
     # -- chunked prompt deposit (rendezvous-style streaming) ---------------
     def _begin_prefill(self, req: ServeRequest) -> None:
-        """Claim a slot and enter the ``prefilling`` state: the prompt
-        will stream into the slot chunk by chunk across micro-steps."""
-        slot = self.kv.alloc(req)
-        self.kv.reset_slot(slot)       # stale pages must not alias history
+        """Claim a slot (or lease blocks + a request row) and enter the
+        ``prefilling`` state: the prompt will stream in chunk by chunk
+        across micro-steps."""
+        if self.kv_layout == "paged":
+            # no blanking needed: paged masking is structural (a stale
+            # page of a block's previous owner is never at a position
+            # <= qpos of the new owner)
+            slot = self.kv.alloc(req, self._token_budget(req))
+        else:
+            slot = self.kv.alloc(req)
+            self.kv.reset_slot(slot)   # stale pages must not alias history
         req.state = "prefilling"
         tokens = np.asarray(req.batch["tokens"][0], np.int32)
         key = jax.random.fold_in(jax.random.PRNGKey(req.seed), req.rid)
@@ -404,10 +578,20 @@ class ContinuousEngine:
             temps[i] = job.req.temperature
             keys[i] = np.asarray(job.key, np.uint32)
             job.req.prefill_chunks += 1
-        buf, state, tok0 = self._chunk(
-            self.params, self.kv.buffers, self._state, jnp.asarray(tok),
-            jnp.asarray(slots), jnp.asarray(pos0), jnp.asarray(n_valid),
-            jnp.asarray(fin_pos), jnp.asarray(keys), jnp.asarray(temps))
+        if self.kv_layout == "paged":
+            # rows double as state-install targets (S = drop row); the
+            # block tables are the write indirection — padding rows carry
+            # all -1 tables, so every pool write drops
+            buf, state, tok0 = self._chunk(
+                self.params, self.kv.buffers, self._state, jnp.asarray(tok),
+                jnp.asarray(slots), jnp.asarray(self.kv.table_rows(slots)),
+                jnp.asarray(pos0), jnp.asarray(n_valid),
+                jnp.asarray(fin_pos), jnp.asarray(keys), jnp.asarray(temps))
+        else:
+            buf, state, tok0 = self._chunk(
+                self.params, self.kv.buffers, self._state, jnp.asarray(tok),
+                jnp.asarray(slots), jnp.asarray(pos0), jnp.asarray(n_valid),
+                jnp.asarray(fin_pos), jnp.asarray(keys), jnp.asarray(temps))
         self.kv.swap_buffers(self._prefill_stream.ordered(buf))
         self._state = state
 
@@ -468,7 +652,12 @@ class ContinuousEngine:
 
     def _decode_micro_step(self, now: float) -> List[ServeRequest]:
         state = self._decode_stream.ordered(self._state)
-        nxt, buf, state = self._decode(self.params, self.kv.buffers, state)
+        if self.kv_layout == "paged":
+            nxt, buf, state = self._decode(self.params, self.kv.buffers,
+                                           state, self.kv.tables_device())
+        else:
+            nxt, buf, state = self._decode(self.params, self.kv.buffers,
+                                           state)
         self.kv.swap_buffers(buf)
         self._state = state
         nxt_np = np.asarray(nxt)        # the one host sync per micro-step
@@ -514,6 +703,9 @@ class ContinuousEngine:
         self._prefilling.clear()
         self.kv.reset()
         self.scheduler.reset()
+        self.peak_live = 0
+        self._resident_tok_sum = 0
+        self._reserved_tok_sum = 0
 
     # -- batch-API convenience (parity with StaticEngine.generate) --------
     def generate(self, batch, max_new_tokens: int, *,

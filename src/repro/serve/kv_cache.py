@@ -54,9 +54,12 @@ class SlotKVCache:
             lambda x: jnp.zeros((num_slots,) + x.shape, x.dtype), proto)
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
         self._owner: List[Optional[object]] = [None] * num_slots
+        self._last_owner: List[Optional[object]] = [None] * num_slots
         # tokens resident per slot (prompt + generated); capped by cache_len
-        # only in the ring sense — the model recycles pages past capacity
-        self._len = np.zeros((num_slots,), np.int64)
+        # only in the ring sense — the model recycles pages past capacity.
+        # np.int32: one dtype for ALL host-side length bookkeeping, matching
+        # the int32 device positions (and the paged pool's tables/lengths)
+        self._len = np.zeros((num_slots,), np.int32)
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self._reset_one = jax.jit(self._reset_slot_impl, donate_argnums=(0,))
         self._gather = jax.jit(self.rows_at)
@@ -132,12 +135,14 @@ class SlotKVCache:
                             "num_free)")
         slot = self._free.pop()
         self._owner[slot] = owner
+        self._last_owner[slot] = owner
         self._len[slot] = 0
         return slot
 
     def free(self, slot: int) -> None:
         if self._owner[slot] is None:
-            raise SlotError(f"double free of slot {slot}")
+            raise SlotError(f"double free of slot {slot} "
+                            f"(last owner {self._last_owner[slot]!r})")
         self._owner[slot] = None
         self._len[slot] = 0
         self._free.append(slot)

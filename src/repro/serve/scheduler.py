@@ -100,7 +100,8 @@ class CellQueueScheduler:
 
     def __init__(self, num_cells: int = 16,
                  cell_size: int = protocol.DEFAULT_CELL_SIZE,
-                 itemsize: int = 4, prefill_chunk_bytes: int = 0):
+                 itemsize: int = 4, prefill_chunk_bytes: int = 0,
+                 block_bytes: int = 0):
         if num_cells < 1:
             raise ValueError("need at least one cell")
         self.num_cells = int(num_cells)
@@ -113,6 +114,9 @@ class CellQueueScheduler:
         # >0: rendezvous-class prompts stream chunk-by-chunk into their
         # slot (chunked prefill) and are priced as chunked handoffs
         self.prefill_chunk_bytes = int(prefill_chunk_bytes)
+        # >0: the deposit target is a paged pool — chunked prompts pay the
+        # per-block table surcharge on top of the chunked handoff
+        self.block_bytes = int(block_bytes)
         self.cells_free = int(num_cells)
         self._cellq: Deque[ServeRequest] = deque()      # buffered (eager)
         self._overflow: Deque[ServeRequest] = deque()   # eager, pool full
@@ -122,6 +126,7 @@ class CellQueueScheduler:
         self.n_submitted = 0
         self.n_eager_admits = 0       # buffered straight into cells
         self.n_deferred = 0           # overflow + rendezvous submissions
+        self.n_block_deferrals = 0    # admissions stalled on free blocks
         self.modeled_admit_cost_s = 0.0
 
     def reset(self) -> None:
@@ -135,6 +140,7 @@ class CellQueueScheduler:
         self.n_submitted = 0
         self.n_eager_admits = 0
         self.n_deferred = 0
+        self.n_block_deferrals = 0
         self.modeled_admit_cost_s = 0.0
 
     # -- classification ----------------------------------------------------
@@ -146,6 +152,10 @@ class CellQueueScheduler:
         eager-class or not; prompts that fit a single chunk deposit whole
         and keep their eager/1-copy price."""
         if 0 < self.prefill_chunk_bytes < nbytes:
+            if self.block_bytes > 0:
+                return protocol.paged_admission_latency(
+                    nbytes, self.prefill_chunk_bytes, self.block_bytes,
+                    self.host_model)
             return protocol.chunked_handoff_latency(
                 nbytes, self.prefill_chunk_bytes, self.host_model)
         return protocol.interthread_latency(nbytes, self.host_model,
@@ -201,19 +211,33 @@ class CellQueueScheduler:
             self._cellq.append(req)
 
     # -- admission ---------------------------------------------------------
-    def admit(self, now: float, free_slots: int) -> List[ServeRequest]:
+    def admit(self, now: float, free_slots: int,
+              can_admit=None) -> List[ServeRequest]:
         """Hand over up to ``free_slots`` requests for prefill, priority
-        cells → promoted overflow → rendezvous."""
+        cells → promoted overflow → rendezvous.
+
+        ``can_admit(req)`` is the engine's second admission gate — with a
+        paged KV pool it checks free *blocks* for the request's tokens.
+        Admission is head-of-line within the priority order: when the
+        next request doesn't fit the pool, admission defers entirely
+        (FIFO is preserved; small latecomers must not starve a large
+        prompt that is already at the head)."""
         out: List[ServeRequest] = []
         while free_slots > 0:
             if self._cellq:
-                req = self._cellq.popleft()
-                self.cells_free += req.cells
-                self._promote()
+                queue = self._cellq
             elif self._rendezvous:
-                req = self._rendezvous.popleft()
+                queue = self._rendezvous
             else:
                 break
+            req = queue[0]
+            if can_admit is not None and not can_admit(req):
+                self.n_block_deferrals += 1
+                break
+            queue.popleft()
+            if queue is self._cellq:
+                self.cells_free += req.cells
+                self._promote()
             req.admit_time = now
             out.append(req)
             free_slots -= 1

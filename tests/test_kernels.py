@@ -10,6 +10,8 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.msgq.ops import copy_accounting, msgq_copy
 from repro.kernels.msgq.ref import msgq_copy_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.kernels.ssd_scan.ops import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
 
@@ -126,6 +128,105 @@ def test_flash_matches_model_chunked_attention():
                           chunk_q=32, chunk_k=32)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+
+def _paged_inputs(B, H, Hkv, hd, P, bs, NB, seed=0, dtype=jnp.float32):
+    """Random pool + per-request tables of distinct blocks + lengths that
+    land strictly inside each table's capacity."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, H, hd)).astype(dtype)
+    kp = jax.random.normal(ks[1], (P, bs, Hkv, hd)).astype(dtype)
+    vp = jax.random.normal(ks[2], (P, bs, Hkv, hd)).astype(dtype)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(P)
+    bt = np.full((B, NB), -1, np.int32)
+    ln = np.zeros((B,), np.int32)
+    used = 0
+    for b in range(B):
+        nb = int(rng.integers(1, NB + 1))
+        bt[b, :nb] = perm[used:used + nb]
+        used += nb
+        ln[b] = int(rng.integers((nb - 1) * bs + 1, nb * bs + 1))
+    return q, kp, vp, jnp.asarray(bt), jnp.asarray(ln)
+
+
+@pytest.mark.parametrize("B,H,Hkv,hd,P,bs,NB", [
+    (1, 2, 2, 16, 6, 8, 3),
+    (3, 4, 2, 32, 16, 16, 4),            # GQA
+    (2, 8, 1, 64, 12, 8, 4),             # MQA
+    (4, 4, 4, 16, 24, 4, 6),             # many small blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_matches_ref(B, H, Hkv, hd, P, bs, NB, dtype):
+    q, kp, vp, bt, ln = _paged_inputs(B, H, Hkv, hd, P, bs, NB, dtype=dtype)
+    out = paged_attention(q, kp, vp, bt, ln)
+    ref = paged_attention_ref(q, kp, vp, bt, ln)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [4, 16])
+def test_paged_attention_sliding_window(window):
+    q, kp, vp, bt, ln = _paged_inputs(2, 4, 2, 16, 10, 8, 4, seed=1)
+    out = paged_attention(q, kp, vp, bt, ln, window=window)
+    ref = paged_attention_ref(q, kp, vp, bt, ln, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_attention_softcap():
+    q, kp, vp, bt, ln = _paged_inputs(2, 4, 2, 16, 10, 8, 4, seed=2)
+    out = paged_attention(q, kp, vp, bt, ln, softcap=20.0)
+    ref = paged_attention_ref(q, kp, vp, bt, ln, softcap=20.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_attention_identity_table_matches_dense():
+    """With an identity block table (block i at pool slot i) the paged
+    kernel is plain causal decode attention — cross-validate against the
+    flash attention oracle at the last position."""
+    B, H, Hkv, hd, bs, NB = 2, 4, 2, 32, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    Sk = NB * bs
+    ln = jnp.array([Sk, Sk - 5], jnp.int32)
+    kp = jax.random.normal(ks[1], (NB * B, bs, Hkv, hd))
+    vp = jax.random.normal(ks[2], (NB * B, bs, Hkv, hd))
+    q = jax.random.normal(ks[0], (B, H, hd))
+    bt = jnp.arange(B * NB, dtype=jnp.int32).reshape(B, NB)
+    out = paged_attention(q, kp, vp, bt, ln)
+    # dense view: request b's tokens are pool blocks [b*NB, (b+1)*NB)
+    kd = kp.reshape(B, Sk, Hkv, hd).transpose(0, 2, 1, 3)
+    vd = vp.reshape(B, Sk, Hkv, hd).transpose(0, 2, 1, 3)
+    for b in range(B):
+        L_b = int(ln[b])
+        ref = flash_attention_ref(
+            q[b:b + 1, :, None, :], kd[b:b + 1, :, :L_b], vd[b:b + 1, :, :L_b],
+            causal=True, q_offset=L_b - 1)[:, :, 0]
+        np.testing.assert_allclose(np.asarray(out[b:b + 1]), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_paged_attention_block_scatter_invariance():
+    """The output depends only on the table's *order*, not on where the
+    blocks physically live in the pool: permuting pool rows (and the
+    table with them) leaves the result unchanged."""
+    q, kp, vp, bt, ln = _paged_inputs(2, 4, 2, 16, 10, 8, 4, seed=4)
+    out = paged_attention(q, kp, vp, bt, ln)
+    perm = np.random.default_rng(0).permutation(kp.shape[0])
+    inv = np.argsort(perm)
+    kp2 = jnp.asarray(np.asarray(kp)[perm])
+    vp2 = jnp.asarray(np.asarray(vp)[perm])
+    bt2 = jnp.where(bt >= 0, jnp.asarray(inv)[jnp.maximum(bt, 0)], -1)
+    out2 = paged_attention(q, kp2, vp2, bt2, ln)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               atol=2e-6, rtol=2e-6)
 
 
 # ---------------------------------------------------------------------------

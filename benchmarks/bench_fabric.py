@@ -1,0 +1,72 @@
+"""Serving-fabric bench: the N-rank router fabric vs the single
+continuous engine on the mixed 16/256 poisson trace (DESIGN.md §10).
+
+Rows land in ``BENCH_fabric.json`` via ``run.py --only fabric --json``
+(and the fabric-smoke CI job drives the same comparison through
+``repro.launch.serve --fabric both``). The verified flags record that
+the replicated placement is greedy token-identical to the single
+engine and that the disaggregated placement completed the trace with
+every prefill migrated, plus the protocol model's KV-migration pricing
+and per-rank utilization.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+from benchmarks.common import Row
+
+TRACE = dict(requests=16, ranks=2, slots=4, prompt_len=(16, 256),
+             max_new=(4, 48), arrival="poisson", rate=400.0, seed=0,
+             prefill_chunk=64, max_prefill_per_step=2, block_size=16)
+TRACE_FAST = dict(requests=8, ranks=2, slots=2, prompt_len=(16, 128),
+                  max_new=(2, 24), arrival="poisson", rate=400.0, seed=0,
+                  prefill_chunk=32, max_prefill_per_step=2, block_size=16)
+
+
+def rows(fast: bool = False) -> Iterator[Row]:
+    from repro.launch.serve import run_fabric
+    res = run_fabric("gemma-2b", smoke=True,
+                     placements=("replicated", "disagg"),
+                     **(TRACE_FAST if fast else TRACE))
+
+    for name in ("single", "fabric_replicated", "fabric_disagg"):
+        m = res[name]
+        us_per_tok = 1e6 / m["tok_s"]
+        ttft = (f" ttft_p95_ms={m['ttft_p95_s']*1e3:.1f}"
+                if "ttft_p95_s" in m else "")
+        yield (f"serve_{name}_us_per_tok", us_per_tok,
+               f"tok_s={m['tok_s']:.1f} p50_ms={m['latency_p50_s']*1e3:.1f} "
+               f"p95_ms={m['latency_p95_s']*1e3:.1f}{ttft}")
+
+    rep = res["fabric_replicated"]
+    yield ("serve_fabric_replicated_identity", 0.0,
+           f"token_identical={res['fabric_token_identical_replicated']} "
+           f"(N={res['ranks']} JSQ replicas vs single engine, greedy "
+           f"mixed prompt_len={res['prompt_len']})")
+    for row in rep["per_rank"]:
+        yield (f"serve_fabric_replicated_rank{row['rank']}_util",
+               row["utilization"],
+               f"role={row['role']} dispatched={row['dispatched']:.0f} "
+               f"tokens={row['tokens']:.0f}")
+
+    dis = res["fabric_disagg"]
+    yield ("serve_fabric_kv_migration_us_per_block",
+           dis["kv_migration_us_per_block"],
+           f"{dis['n_migrations']:.0f} handoffs {dis['blocks_moved']:.0f} "
+           f"blocks {dis['bytes_moved']:.0f}B modeled "
+           f"{dis['kv_migration_modeled_s']*1e6:.1f}us total "
+           f"(protocol.kv_migration_latency)")
+    for row in dis["per_rank"]:
+        yield (f"serve_fabric_disagg_rank{row['rank']}_util",
+               row["utilization"],
+               f"role={row['role']} migrated_in={row['migrated_in']:.0f} "
+               f"migrated_out={row['migrated_out']:.0f} "
+               f"tokens={row['tokens']:.0f}")
+    yield ("serve_fabric_disagg_identity", 0.0,
+           f"token_identical={res['fabric_token_identical_disagg']} "
+           f"(prefill rank streams KV block-by-block to decode rank; "
+           f"migrated leases, not recompute)")
+    yield ("serve_fabric_dispatch_cost_us", rep["router_dispatch_cost_us"],
+           f"router cell-queue dispatch hop over "
+           f"{int(rep['n'])} requests (paper §3.2 pricing)")

@@ -27,14 +27,14 @@ def main() -> None:
                     help="skip subprocess wall-time measurements")
     ap.add_argument("--only", default=None,
                     help="run a single bench module (p2p|barrier|reduce|"
-                         "spmv|collectives|serve)")
+                         "spmv|collectives|serve|fabric)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (e.g. "
                          "BENCH_collectives.json)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_barrier, bench_collectives, bench_p2p,
-                            bench_reduce, bench_serve, bench_spmv)
+    from benchmarks import (bench_barrier, bench_collectives, bench_fabric,
+                            bench_p2p, bench_reduce, bench_serve, bench_spmv)
     modules = {
         "p2p": (bench_p2p, "paper Fig.3: p2p latency/bandwidth"),
         "barrier": (bench_barrier, "paper Fig.4: barrier latency"),
@@ -46,6 +46,10 @@ def main() -> None:
         "serve": (bench_serve,
                   "beyond-paper: continuous vs static serving on a "
                   "mixed-arrival trace (DESIGN.md §8)"),
+        "fabric": (bench_fabric,
+                   "beyond-paper: multi-rank serving fabric (replicated "
+                   "vs disaggregated placement, KV-block migration — "
+                   "DESIGN.md §10)"),
     }
     if args.only:
         modules = {args.only: modules[args.only]}

@@ -117,6 +117,30 @@ def paged_admission_latency(nbytes: int, chunk_bytes: int, block_bytes: int,
             + nblocks * m.t_envelope * 0.25)
 
 
+def kv_migration_latency(nbytes: int, block_bytes: int,
+                         m: HostModel = HostModel()) -> float:
+    """Price of migrating a finished prefill's KV to another rank
+    *block-by-block* (the disaggregated serving fabric's handoff,
+    DESIGN.md §10).
+
+    One rendezvous handshake establishes the transfer — the decode rank
+    has already leased the destination blocks (the posted receive), so
+    the lease travels, not the recomputation — then every block is its
+    own message priced under the protocol the *block* payload selects
+    (KV blocks are normally 1-copy sized; a tiny tail block may ride the
+    eager path). The per-block envelope is what bounds decode stalls:
+    the receiver can start decoding as soon as the last block lands,
+    and no single message ever exceeds one block.
+    """
+    if block_bytes < 1:
+        raise ValueError("block_bytes must be >= 1")
+    full, tail = divmod(max(0, nbytes), block_bytes)
+    cost = m.t_handshake + full * interthread_latency(block_bytes, m)
+    if tail:
+        cost += interthread_latency(tail, m)
+    return cost
+
+
 def interprocess_latency(nbytes: int, m: HostModel = HostModel()) -> float:
     """MPI-everywhere shared-memory messaging (eager / rndv, always 2-copy)."""
     if nbytes <= EAGER_THRESHOLD_INTERPROCESS:

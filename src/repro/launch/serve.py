@@ -17,6 +17,14 @@ A further comparison run swaps the slot pool for the *paged* KV substrate
 (DESIGN.md §9) at the exact same HBM budget and records bytes per
 resident token, peak concurrency and trace-level token identity.
 
+With ``--fabric replicated|disagg|both --ranks N`` the driver instead
+runs the multi-rank serving fabric comparison (DESIGN.md §10): the same
+trace through a single paged engine and through the router-dispatched
+fabric under each placement policy, recording aggregate tok/s, TTFT
+percentiles per policy, per-rank utilization, KV-migration pricing and
+greedy token identity (``BENCH_fabric.json``, schema
+``repro-serve-bench-v4``).
+
 CPU demo:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
       --engine both --requests 12 --slots 4 --prompt-len 16,256 \
@@ -40,8 +48,8 @@ import numpy as np
 from repro.config import ServeConfig, TrainConfig
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.models.registry import build_model, make_synthetic_batch
-from repro.serve import (ContinuousEngine, ServeRequest, StaticEngine,
-                         make_trace)
+from repro.serve import (ContinuousEngine, ServeRequest, ServingFabric,
+                         StaticEngine, make_trace)
 
 
 def useful_tokens(row: np.ndarray, eos_id: int) -> int:
@@ -75,10 +83,11 @@ def requests_from_trace(cfg, trace, *, dtype: str = "float32",
 # Drivers
 # ---------------------------------------------------------------------------
 
-def drive_continuous(eng: ContinuousEngine, requests: List[ServeRequest]
-                     ) -> Dict[str, float]:
-    """Wall-clock traffic loop: submit each request at its arrival time,
-    run serving micro-steps until everything drains."""
+def _drive_wall_clock(target, requests: List[ServeRequest]) -> float:
+    """Shared wall-clock traffic loop over anything with the serving
+    drive surface (``submit``/``step``/``idle`` — an engine or a
+    fabric): submit each request at its arrival time, run micro-steps
+    until everything drains, return the makespan in seconds."""
     pending = sorted(requests, key=lambda r: r.arrival)
     n, i = len(pending), 0
     done = 0
@@ -86,13 +95,19 @@ def drive_continuous(eng: ContinuousEngine, requests: List[ServeRequest]
     while done < n:
         now = time.perf_counter() - t0
         while i < n and pending[i].arrival <= now:
-            eng.submit(pending[i], now)
+            target.submit(pending[i], now)
             i += 1
-        if eng.idle and i < n:
+        if target.idle and i < n:
             time.sleep(min(1e-3, max(0.0, pending[i].arrival - now)))
             continue
-        done += len(eng.step(time.perf_counter() - t0))
-    makespan = time.perf_counter() - t0
+        done += len(target.step(time.perf_counter() - t0))
+    return time.perf_counter() - t0
+
+
+def drive_continuous(eng: ContinuousEngine, requests: List[ServeRequest]
+                     ) -> Dict[str, float]:
+    """Wall-clock traffic loop through one continuous engine."""
+    makespan = _drive_wall_clock(eng, requests)
     toks = sum(useful_tokens(r.output[:r.generated], eng.eos_id)
                for r in requests)
     stats = eng.scheduler.latency_stats()
@@ -158,6 +173,127 @@ def drive_static(eng: StaticEngine, requests: List[ServeRequest],
             "latency_p50_s": float(np.percentile(lat, 50)),
             "latency_p95_s": float(np.percentile(lat, 95)),
             "latency_mean_s": float(lat.mean())}
+
+
+def drive_fabric(fab: ServingFabric, requests: List[ServeRequest]
+                 ) -> Dict[str, float]:
+    """Wall-clock traffic loop through the serving fabric: the shared
+    drive loop against the router's ``submit``/``step`` (dispatch →
+    every rank → migrate) surface."""
+    makespan = _drive_wall_clock(fab, requests)
+    eos = fab.workers[0].engine.eos_id
+    toks = sum(useful_tokens(r.output[:r.generated], eos) for r in requests)
+    stats = fab.stats()
+    stats.update(makespan_s=makespan, useful_tokens=float(toks),
+                 tok_s=toks / makespan)
+    return stats
+
+
+def _warm_fabric(fab: ServingFabric, cfg, *, dtype: str, seed: int,
+                 prompt_len: int) -> None:
+    """Compile every rank's jits off the clock (chunk + decode dispatch,
+    and on the disaggregated path the migrate copy + state import), then
+    reset the whole fabric — warm requests must leave no queue entries,
+    leases, device state or accounting behind (PR-5 satellite: the
+    scheduler's rid-keyed maps are exactly what this reset must clear)."""
+    trace = make_trace(2 * fab.ranks, prompt_len=prompt_len, max_new=2,
+                       arrival="all", seed=seed + 7)
+    for req in requests_from_trace(cfg, trace, dtype=dtype, seed=seed + 7):
+        fab.submit(req, 0.0)
+    guard = 0
+    while not fab.idle:
+        fab.step(0.0)
+        guard += 1
+        if guard > 10_000:
+            raise RuntimeError("fabric warm-up failed to drain")
+    fab.reset()
+
+
+def run_fabric(arch: str = "gemma-2b", *, smoke: bool = True,
+               requests: int = 16, ranks: int = 2, slots: int = 4,
+               prompt_len=(16, 256), max_new=(4, 32),
+               arrival: str = "poisson", rate: float = 50.0,
+               burst: int = 4, temperature: float = 0.0, eos_id: int = -1,
+               seed: int = 0, prefill_chunk: int = 64,
+               max_prefill_per_step: int = 2, block_size: int = 16,
+               placements=("replicated", "disagg"),
+               n_prefill_ranks: int = 1) -> Dict:
+    """Fabric-vs-single comparison (DESIGN.md §10): drive the same
+    arrival trace through a single paged ``ContinuousEngine`` and then
+    through an N-rank :class:`ServingFabric` under each requested
+    placement policy. Records aggregate tok/s and TTFT p50/p95 per
+    policy, per-rank utilization, the disaggregated path's KV-migration
+    accounting, and greedy token-identity of the replicated path against
+    the single-engine baseline (every fabric rank runs the same chunked
+    paged engine, so placement must not change a single sampled token).
+    """
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    dtype = "float32" if smoke else "bfloat16"
+    tcfg = TrainConfig(param_dtype=dtype, compute_dtype=dtype, remat=False,
+                       loss_chunk=64, attn_chunk_threshold=4096)
+    model = build_model(cfg, tcfg, ServeConfig(), tp=1)
+    if model.decode_step_paged is None:
+        raise ValueError(f"arch {cfg.name!r} has no paged decode path; "
+                         "the serving fabric runs paged engines only")
+    params = model.init(jax.random.PRNGKey(seed))
+    plens = ((int(prompt_len),) if isinstance(prompt_len, int)
+             else tuple(int(p) for p in prompt_len))
+    pmax = max(plens)
+    hi = max_new if isinstance(max_new, int) else max_new[1]
+    cache_len = pmax + hi
+
+    trace = make_trace(requests, prompt_len=plens, max_new=max_new,
+                       arrival=arrival, rate=rate, burst=burst,
+                       temperature=temperature, seed=seed)
+    result: Dict = {"arch": cfg.name, "requests": requests, "ranks": ranks,
+                    "slots_per_rank": slots, "prompt_len": list(plens),
+                    "cache_len": cache_len, "arrival": arrival,
+                    "rate": rate, "eos_id": eos_id,
+                    "prefill_chunk": prefill_chunk,
+                    "block_size": block_size,
+                    "n_prefill_ranks": n_prefill_ranks,
+                    "placements": list(placements)}
+
+    # -- single-engine baseline (one paged engine, same per-rank size) --
+    eng = ContinuousEngine(model, params, cache_len=cache_len,
+                           num_slots=slots, eos_id=eos_id,
+                           prefill_chunk=prefill_chunk,
+                           max_prefill_per_step=max_prefill_per_step,
+                           kv_layout="paged", block_size=block_size)
+    warm = {k: np.asarray(v) for k, v in make_synthetic_batch(
+        cfg, 1, plens[0], seed=seed, compute_dtype=dtype).items()
+        if k != "labels"}
+    eng.generate({k: np.concatenate([v] * min(2, eng.kv.num_slots))
+                  for k, v in warm.items()}, 2)
+    eng.reset()
+    base_reqs = requests_from_trace(cfg, trace, dtype=dtype, seed=seed)
+    result["single"] = drive_continuous(eng, base_reqs)
+
+    # -- fabric runs, one per placement policy --
+    for placement in placements:
+        fab = ServingFabric(model, params, ranks=ranks,
+                            placement=placement, cache_len=cache_len,
+                            slots_per_rank=slots, eos_id=eos_id,
+                            prefill_chunk=prefill_chunk,
+                            max_prefill_per_step=max_prefill_per_step,
+                            block_size=block_size,
+                            n_prefill_ranks=n_prefill_ranks)
+        try:
+            _warm_fabric(fab, cfg, dtype=dtype, seed=seed,
+                         prompt_len=plens[0])
+            reqs = requests_from_trace(cfg, trace, dtype=dtype, seed=seed)
+            result[f"fabric_{placement}"] = drive_fabric(fab, reqs)
+            ident = bool(all(
+                np.array_equal(a.output[:a.generated],
+                               b.output[:b.generated])
+                for a, b in zip(base_reqs, reqs)))
+            result[f"fabric_token_identical_{placement}"] = ident
+            result[f"fabric_{placement}"]["speedup_vs_single"] = (
+                result[f"fabric_{placement}"]["tok_s"]
+                / result["single"]["tok_s"])
+        finally:
+            fab.close()
+    return result
 
 
 # ---------------------------------------------------------------------------
@@ -364,6 +500,14 @@ def main():
                     help="tokens per KV block for the paged comparison run")
     ap.add_argument("--no-paged-compare", action="store_true",
                     help="skip the paged-KV comparison run")
+    ap.add_argument("--fabric", default="off",
+                    choices=["off", "replicated", "disagg", "both"],
+                    help="run the multi-rank serving fabric comparison "
+                         "instead of the engine comparison (DESIGN.md §10)")
+    ap.add_argument("--ranks", type=int, default=2,
+                    help="engine ranks in the serving fabric")
+    ap.add_argument("--prefill-ranks", type=int, default=1,
+                    help="dedicated prefill ranks (disaggregated fabric)")
     ap.add_argument("--max-new-lo", type=int, default=4)
     ap.add_argument("--max-new-hi", type=int, default=32)
     ap.add_argument("--arrival", default="poisson",
@@ -381,6 +525,56 @@ def main():
     args = ap.parse_args()
 
     plens = [int(x) for x in str(args.prompt_len).split(",") if x]
+    if args.fabric != "off":
+        placements = (("replicated", "disagg") if args.fabric == "both"
+                      else (args.fabric,))
+        result = run_fabric(
+            args.arch, smoke=args.smoke, requests=args.requests,
+            ranks=args.ranks, slots=args.slots,
+            prompt_len=plens[0] if len(plens) == 1 else plens,
+            max_new=(args.max_new_lo, args.max_new_hi),
+            arrival=args.arrival, rate=args.rate, burst=args.burst,
+            temperature=args.temperature, eos_id=args.eos_id,
+            seed=args.seed, prefill_chunk=args.prefill_chunk,
+            max_prefill_per_step=args.max_prefill_per_step,
+            block_size=args.kv_block_size, placements=placements,
+            n_prefill_ranks=args.prefill_ranks)
+        print(f"arch={result['arch']} requests={result['requests']} "
+              f"ranks={result['ranks']} slots/rank="
+              f"{result['slots_per_rank']} prompt_len="
+              f"{result['prompt_len']}")
+        for name in ("single", "fabric_replicated", "fabric_disagg"):
+            if name not in result:
+                continue
+            m = result[name]
+            ttft = (f"  ttft_p95 {m['ttft_p95_s'] * 1e3:.0f}ms"
+                    if "ttft_p95_s" in m else "")
+            print(f"{name:>18}: {m['tok_s']:8.1f} tok/s  "
+                  f"makespan {m['makespan_s']:.2f}s  "
+                  f"p50 {m['latency_p50_s'] * 1e3:.0f}ms  "
+                  f"p95 {m['latency_p95_s'] * 1e3:.0f}ms{ttft}")
+            for row in m.get("per_rank", ()):
+                print(f"{'':>18}  rank {row['rank']} [{row['role']:>9}] "
+                      f"util {row['utilization']:.2f}  "
+                      f"dispatched {row['dispatched']:.0f}  "
+                      f"migrated {row['migrated_in']:.0f}in/"
+                      f"{row['migrated_out']:.0f}out  "
+                      f"tokens {row['tokens']:.0f}")
+            if "n_migrations" in m:
+                print(f"{'':>18}  kv_migration: {m['n_migrations']:.0f} "
+                      f"handoffs, {m['blocks_moved']:.0f} blocks, "
+                      f"p95 {m.get('kv_migration_p95_us', 0.0):.1f}us "
+                      f"modeled")
+        for p in result["placements"]:
+            print(f"   token_identical[{p}]="
+                  f"{result.get(f'fabric_token_identical_{p}')}")
+        if args.json:
+            payload = {"schema": "repro-serve-bench-v4", **result}
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=1)
+            print(f"wrote {args.json}")
+        return
+
     result = run_traffic(
         args.arch, smoke=args.smoke, requests=args.requests,
         slots=args.slots, prompt_len=plens[0] if len(plens) == 1 else plens,

@@ -1,5 +1,10 @@
 from repro.serve.block_pool import BlockPool, PagedKVCache  # noqa: F401
-from repro.serve.engine import ContinuousEngine, Engine, StaticEngine  # noqa: F401
+from repro.serve.engine import (ContinuousEngine, Engine, KVHandoff,  # noqa: F401
+                                StaticEngine)
+from repro.serve.fabric import (DisaggregatedPlacement, EngineWorker,  # noqa: F401
+                                KVBlockTransport, ReplicatedPlacement,
+                                ServingFabric)
 from repro.serve.kv_cache import SlotError, SlotKVCache  # noqa: F401
 from repro.serve.scheduler import (CellQueueScheduler, ServeRequest,  # noqa: F401
-                                   TraceEntry, make_trace, shard_trace)
+                                   TraceEntry, latency_stats_over,
+                                   make_trace, shard_trace)

@@ -182,6 +182,14 @@ class PagedKVCache:
     def blocks_for(self, ntokens: int) -> int:
         return self.pool.blocks_needed(ntokens)
 
+    def blocks_of(self, slot: int) -> List[int]:
+        """The block ids leased to ``slot``, in table order (the
+        migration transport copies these 1:1 into the destination
+        lease)."""
+        if self._owner[slot] is None:
+            raise SlotError(f"blocks_of free row {slot}")
+        return self._tables[slot, :int(self._nblocks[slot])].tolist()
+
     def can_admit(self, ntokens: int) -> bool:
         """One free row + enough free blocks for ``ntokens`` tokens."""
         nb = self.blocks_for(ntokens)

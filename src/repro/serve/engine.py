@@ -48,6 +48,12 @@ Threadcomm integration:
 * Data-parallel replica fan-out is ``Comm.split`` + ``shard_trace``: each
   replica family runs its own engine over its slice of the traffic (see
   ``tests/mp_cases.py::case_serve_replica_fanout``).
+* The multi-rank serving fabric (:mod:`repro.serve.fabric`, DESIGN.md
+  §10) composes engines across ranks: ``role="prefill"`` engines lease
+  prompt-only paged blocks and park finished prefills in
+  ``ready_handoffs`` for block-by-block KV migration to a decode rank
+  (``begin_import``/``finish_import``), never running a decode dispatch
+  themselves.
 """
 
 from __future__ import annotations
@@ -167,6 +173,21 @@ class _PrefillJob:        # field-compare requests (ndarray __eq__ raises)
     off: int = 0
 
 
+@dataclass(eq=False)
+class KVHandoff:
+    """A prefill-complete request ready to migrate to a decode rank
+    (disaggregated fabric, DESIGN.md §10): the local request row still
+    holds the prompt's KV blocks and the sampled-first-token decode
+    state. The owning engine keeps the lease until
+    :meth:`ContinuousEngine.release_handoff` — the source blocks must
+    not be recycled while the transport is still copying out of them."""
+    req: ServeRequest
+    slot: int                     # source request row
+    out: np.ndarray               # (max_new,) output buffer, out[0] = tok0
+    length: int                   # resident prompt tokens
+    blocks: List[int]             # source pool block ids, table order
+
+
 class ContinuousEngine:
     """Continuous-batching engine: slot-pool decode + cell-queue admission
     + chunked, batched prefill.
@@ -180,10 +201,24 @@ class ContinuousEngine:
                  eos_id: int = -1, scheduler: Optional[CellQueueScheduler] = None,
                  comm=None, max_prefill_per_step: int = 1,
                  prefill_chunk: int = 64, kv_layout: str = "slot",
-                 block_size: int = 16, num_blocks: Optional[int] = None):
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 role: str = "full"):
         if kv_layout not in ("slot", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r} "
                              "(expected 'slot' or 'paged')")
+        if role not in ("full", "prefill", "decode"):
+            raise ValueError(f"unknown role {role!r} "
+                             "(expected 'full', 'prefill' or 'decode')")
+        if role == "prefill" and kv_layout != "paged":
+            raise ValueError("a prefill-rank engine hands its KV off "
+                             "block-by-block; it requires kv_layout='paged'")
+        #: fabric role (DESIGN.md §10): a ``"prefill"`` engine leases
+        #: blocks for the prompt only, never decodes, and parks every
+        #: prefill-complete request in :attr:`ready_handoffs` for the
+        #: transport to migrate; a ``"decode"`` engine receives requests
+        #: through :meth:`begin_import`/:meth:`finish_import` instead of
+        #: prefilling them. ``"full"`` is the single-engine behavior.
+        self.role = role
         self.model = model
         self.params = params
         self.cache_len = cache_len
@@ -250,6 +285,8 @@ class ContinuousEngine:
         self._decode = jax.jit(_decode_traced, donate_argnums=(1, 2))
         self._admit_state = jax.jit(self._admit_impl, donate_argnums=(0,))
         self._park_state = jax.jit(self._park_impl, donate_argnums=(0,))
+        self._import_state = jax.jit(self._import_state_impl,
+                                     donate_argnums=(0,))
         if self.prefill_chunk:
             chunk_fn = (self._chunk_impl_paged(model, num_slots)
                         if kv_layout == "paged"
@@ -263,6 +300,9 @@ class ContinuousEngine:
         #: partially-deposited requests, FIFO; each micro-step serves the
         #: first ``max_prefill_per_step`` of them with one fused dispatch
         self._prefilling: Deque[_PrefillJob] = deque()
+        #: role="prefill": prefill-complete requests awaiting migration
+        #: (their rows/blocks stay leased until release_handoff)
+        self.ready_handoffs: List[KVHandoff] = []
 
         # per-slot sampling/position state lives ON DEVICE and is updated
         # inside the jits (donated) — the decode hot loop costs one
@@ -336,6 +376,19 @@ class ContinuousEngine:
         """Park a retired slot's position: its decode-vmap row keeps
         computing, but the drop-mode cache writes discard everything."""
         return {**state, "pos": state["pos"].at[slot].set(PARK_POS)}
+
+    @staticmethod
+    def _import_state_impl(state, slot, tok, pos, key, temp):
+        """Install a *migrated* request's decode state at ``slot`` — the
+        exact (tok, pos, key, temp) the source rank's finalize produced,
+        no resampling (the first token was already drawn there; replaying
+        the draw here would fork the request's PRNG chain)."""
+        return {
+            "tok": state["tok"].at[slot].set(tok),
+            "pos": state["pos"].at[slot].set(pos),
+            "keys": state["keys"].at[slot].set(key),
+            "temp": state["temp"].at[slot].set(temp),
+        }
 
     @staticmethod
     def _install_finalized_rows(state, logits, rows, fin_pos, keys, temps,
@@ -419,21 +472,35 @@ class ContinuousEngine:
         admission gate once it reaches the queue head."""
         if self.kv_layout == "paged":
             budget = self._token_budget(req)
-            # a lease must fit BOTH caps: the per-request table and the
-            # whole pool — a request needing more blocks than exist would
-            # otherwise be accepted and livelock admission (head-of-line
-            # deferral that can never clear)
-            nb = min(self.kv.max_blocks_per_req, self.kv.pool.num_blocks)
-            cap = nb * self.kv.block_size
+            cap = self.admittable_tokens
             if budget > cap:
+                # a prefill-rank lease is prompt-only; the message must
+                # name the quantity actually rejected
+                what = ("prompt" if self.role == "prefill"
+                        else "prompt+max_new")
+                fix = ("" if self.role == "prefill"
+                       else " or lower max_new_tokens")
                 raise ValueError(
-                    f"request {req.rid}: prompt+max_new = {budget} tokens "
+                    f"request {req.rid}: {what} = {budget} tokens "
                     f"exceeds the admittable capacity {cap} (= min(table "
                     f"cap {self.kv.max_blocks_per_req}, pool "
                     f"{self.kv.pool.num_blocks}) blocks x "
-                    f"{self.kv.block_size}); raise cache_len/num_blocks "
-                    "or lower max_new_tokens")
+                    f"{self.kv.block_size}); raise cache_len/num_blocks"
+                    f"{fix}")
         return self.scheduler.submit(req, now)
+
+    @property
+    def admittable_tokens(self) -> int:
+        """Largest token budget one request could ever lease here: a
+        lease must fit BOTH caps, the per-request table and the whole
+        pool — a request needing more blocks than exist would otherwise
+        be accepted and livelock admission (head-of-line deferral that
+        can never clear). Unbounded for the slot layout (ring
+        recycling serves arbitrarily long decodes at fixed footprint)."""
+        if self.kv_layout != "paged":
+            return 2 ** 31 - 1
+        return (min(self.kv.max_blocks_per_req, self.kv.pool.num_blocks)
+                * self.kv.block_size)
 
     @property
     def num_active(self) -> int:
@@ -495,7 +562,12 @@ class ContinuousEngine:
 
     def _token_budget(self, req: ServeRequest) -> int:
         """Token capacity a request leases at admission: the prompt plus
-        every token it may generate (no mid-decode block exhaustion)."""
+        every token it may generate (no mid-decode block exhaustion). A
+        prefill-rank engine leases the prompt only — the first generated
+        token's KV (and every one after it) is written on the decode
+        rank that receives the migrated blocks."""
+        if self.role == "prefill":
+            return req.prompt_len
         return req.prompt_len + req.max_new_tokens
 
     def _account(self) -> None:
@@ -646,6 +718,16 @@ class ContinuousEngine:
         req.generated = 1
         if (0 <= self.eos_id == tok0) or req.max_new_tokens == 1:
             return self._finish(slot, req, out, now)
+        if self.role == "prefill":
+            # disaggregated fabric: the request does NOT enter this
+            # engine's decode pool (never setting _slot_req keeps
+            # num_decoding at 0, so no decode dispatch can advance the
+            # held state before the transport ships it)
+            req.state = "migrating"
+            self.ready_handoffs.append(KVHandoff(
+                req=req, slot=slot, out=out, length=self.kv.length(slot),
+                blocks=self.kv.blocks_of(slot)))
+            return None
         self._slot_req[slot] = req
         self._slot_out[slot] = out
         return None
@@ -690,6 +772,57 @@ class ContinuousEngine:
         self.scheduler.record_finish(req, now)
         return req
 
+    # -- disaggregated KV handoff (fabric transport surface; paged only) ---
+    def take_handoffs(self) -> List[KVHandoff]:
+        """Drain the prefill-complete requests awaiting migration. The
+        caller (the fabric's transport hop) owns getting each one to a
+        decode rank and then calling :meth:`release_handoff` — until
+        then this engine keeps the source blocks leased."""
+        out, self.ready_handoffs = self.ready_handoffs, []
+        return out
+
+    def handoff_state(self, slot: int):
+        """The per-request decode-state row migrating with the KV: the
+        device-resident (tok, pos, keys, temp) the finalize tail
+        installed (pos = prompt_len, tok = the first sampled token,
+        keys = the request's advanced PRNG chain)."""
+        return {k: self._state[k][slot] for k in
+                ("tok", "pos", "keys", "temp")}
+
+    def release_handoff(self, slot: int) -> None:
+        """Migration complete: return the source row + blocks to the
+        local pools and park the row's device state."""
+        self.kv.free(slot)
+        self._state = self._park_state(self._state, jnp.int32(slot))
+
+    def begin_import(self, req: ServeRequest):
+        """Decode-rank half of the handoff, part 1: claim a request row
+        and lease blocks for the request's FULL budget (prompt +
+        max_new) *before* the transport copies — the lease is the posted
+        receive of the rendezvous discipline. Returns ``(slot,
+        dst_blocks)``; the transport writes the migrated prompt KV into
+        the first ``blocks_for(prompt_len)`` of ``dst_blocks``."""
+        if self.kv_layout != "paged":
+            raise ValueError("KV-block import needs kv_layout='paged'")
+        slot = self.kv.alloc(req, req.prompt_len + req.max_new_tokens)
+        return slot, self.kv.blocks_of(slot)
+
+    def finish_import(self, slot: int, handoff: KVHandoff, state_row,
+                      now: float) -> None:
+        """Decode-rank half, part 2 (after the transport's waitall):
+        install the migrated decode state at ``slot`` and enter the
+        request into this engine's decode pool, continuing exactly where
+        the prefill rank stopped (generated == 1, next position ==
+        prompt_len)."""
+        req = handoff.req
+        self.kv.advance(slot, handoff.length)    # resident prompt tokens
+        self._state = self._import_state(
+            self._state, jnp.int32(slot), state_row["tok"],
+            state_row["pos"], state_row["keys"], state_row["temp"])
+        req.state = "decoding"
+        self._slot_req[slot] = req
+        self._slot_out[slot] = handoff.out
+
     def reset(self) -> None:
         """Return the engine to its post-construction state: every slot
         freed, device-side sampling/position state re-zeroed (positions
@@ -701,6 +834,7 @@ class ContinuousEngine:
         self._slot_req = [None] * S
         self._slot_out = [None] * S
         self._prefilling.clear()
+        self.ready_handoffs.clear()
         self.kv.reset()
         self.scheduler.reset()
         self.peak_live = 0

@@ -1,0 +1,11 @@
+"""Multi-rank serving fabric over the threadcomm substrate (DESIGN.md
+§10): router rank + N engine ranks, replicated or prefill/decode-
+disaggregated placement, request-based KV-block migration."""
+
+from repro.serve.fabric.placement import (DisaggregatedPlacement,  # noqa: F401
+                                          Placement,
+                                          ReplicatedPlacement,
+                                          make_placement)
+from repro.serve.fabric.router import ServingFabric  # noqa: F401
+from repro.serve.fabric.transport import KVBlockTransport  # noqa: F401
+from repro.serve.fabric.worker import EngineWorker  # noqa: F401

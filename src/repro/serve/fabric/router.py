@@ -1,0 +1,283 @@
+"""The serving fabric's router rank (DESIGN.md §10).
+
+``ServingFabric`` turns one ``ContinuousEngine`` into a multi-rank
+serving fabric over the unified ``Comm`` substrate: a **router** that
+classifies, prices and dispatches requests, and **N engine ranks**
+(:class:`~repro.serve.fabric.worker.EngineWorker`), each a paged
+``ContinuousEngine`` bound to its own derived communication context and
+``CommStream`` pair. The rank structure is the paper's: engine ranks
+are derived from the root threadcomm by ``split`` (one color class per
+engine rank when the comm is wide enough) and each rank's context is a
+``dup`` — same group, fresh context — so per-rank communication never
+serializes against a peer's, which is exactly the MPIX-stream lesson
+the fabric exists to demonstrate at serving scale.
+
+The router reuses the serving substrate's own admission machinery for
+the **dispatch hop**: new requests land in the router's
+``CellQueueScheduler`` (bounded cells, eager/rendezvous classification,
+protocol-model pricing — paper §3.2), and are dealt to engine ranks
+join-shortest-queue as ranks have room. Placement policy decides who is
+eligible (:mod:`~repro.serve.fabric.placement`):
+
+* **replicated** — every rank a full replica, JSQ over all of them;
+* **disaggregated** — prefill ranks deposit prompts, then the router's
+  migrate hop streams each finished prefill's KV block-by-block to a
+  decode rank through :class:`~repro.serve.fabric.transport.
+  KVBlockTransport` (request-based sends, ``waitall`` completion,
+  ``protocol.kv_migration_latency`` pricing), handing the BlockPool
+  lease off rather than recomputing the prefill.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.comm import ThreadComm, threadcomm_init
+from repro.core.compat import make_mesh
+from repro.serve.engine import ContinuousEngine
+from repro.serve.fabric.placement import Placement, make_placement
+from repro.serve.fabric.transport import KVBlockTransport
+from repro.serve.fabric.worker import EngineWorker
+from repro.serve.scheduler import (CellQueueScheduler, ServeRequest,
+                                   latency_stats_over)
+
+
+class ServingFabric:
+    """Router + N engine ranks over one communication substrate.
+
+    Drive it like an engine: ``submit(req, now)`` then ``step(now)``
+    until ``idle`` — the router dispatches, every rank advances one
+    micro-step, and (disaggregated) finished prefills migrate. The
+    constructor owns a service-mode root threadcomm over the local
+    device mesh unless ``comm`` (already started) is passed in; call
+    :meth:`close` to finish/free an owned comm.
+    """
+
+    def __init__(self, model, params, *, ranks: int = 2,
+                 placement="replicated", cache_len: int,
+                 slots_per_rank: int = 4, eos_id: int = -1,
+                 prefill_chunk: int = 64, max_prefill_per_step: int = 2,
+                 block_size: int = 16,
+                 blocks_per_rank: Optional[int] = None,
+                 n_prefill_ranks: int = 1,
+                 dispatch_window: Optional[int] = None,
+                 comm: Optional[ThreadComm] = None):
+        self.placement: Placement = (placement if isinstance(placement,
+                                                             Placement)
+                                     else make_placement(placement,
+                                                         n_prefill_ranks))
+        roles = self.placement.roles(ranks)
+        self.ranks = int(ranks)
+
+        # -- substrate: root threadcomm + per-rank derived contexts --
+        if comm is None:
+            mesh = make_mesh((jax.local_device_count(),), ("serve",))
+            comm = threadcomm_init(mesh, process_axes=(),
+                                   thread_axes=("serve",))
+            comm.start()               # service-mode: finish at close()
+            self._owns_comm = True
+        else:
+            self._owns_comm = False
+        self.comm = comm
+        subs = self._engine_comms(comm, ranks)
+
+        # -- the dispatch hop's admission queue (router rank) --
+        self.scheduler = CellQueueScheduler(
+            num_cells=4 * ranks * slots_per_rank,
+            prefill_chunk_bytes=4 * prefill_chunk,
+            block_bytes=4 * block_size)
+        #: JSQ backpressure: a rank above this load receives no new
+        #: dispatches; excess requests wait in the router's cell queue
+        #: (the bounded-buffer discipline of paper §3.2, one hop up)
+        self.dispatch_window = (int(dispatch_window) if dispatch_window
+                                else 2 * slots_per_rank)
+
+        self.workers: List[EngineWorker] = []
+        for i, role in enumerate(roles):
+            eng = ContinuousEngine(
+                model, params, cache_len=cache_len,
+                num_slots=slots_per_rank, eos_id=eos_id, comm=subs[i],
+                prefill_chunk=prefill_chunk,
+                max_prefill_per_step=max_prefill_per_step,
+                kv_layout="paged", block_size=block_size,
+                num_blocks=blocks_per_rank, role=role)
+            self.workers.append(EngineWorker(i, role, eng, comm=subs[i]))
+
+        self.transport = (KVBlockTransport(comm)
+                          if self.placement.needs_migration else None)
+        self.finished: List[ServeRequest] = []
+        self.total_steps = 0
+
+    @staticmethod
+    def _engine_comms(root: ThreadComm, ranks: int) -> List:
+        """One derived communication context per engine rank. With a
+        root wide enough, ``split`` assigns each engine rank a
+        contiguous color class of unified ranks (its own sub-comm
+        family); narrower roots (the 1-device CPU driver) fall back to
+        ``dup`` — same group, fresh context per rank. Either way every
+        rank's streams serialize only against themselves."""
+        S = root.size
+        if S >= ranks:
+            color = [ur * ranks // S for ur in range(S)]
+            sub = root.split(color)
+            return [sub.dup() for _ in range(ranks)]
+        return [root.dup() for _ in range(ranks)]
+
+    # -- intake (the dispatch hop) -----------------------------------------
+    def submit(self, req: ServeRequest, now: float = 0.0) -> str:
+        """Queue a request at the router: classified and priced by the
+        cell-queue admission model, dispatched to an engine rank at the
+        next :meth:`step`. The full decode budget is validated against
+        the serving ranks here — a request no rank could ever lease
+        must fail at submit, not blow up mid-step after the dispatch
+        hop already popped it (or livelock the migrate hop)."""
+        budget = req.prompt_len + req.max_new_tokens
+        decode_role = ("decode" if self.placement.needs_migration
+                       else "full")
+        cap = max((w.engine.admittable_tokens for w in self.workers
+                   if w.role == decode_role), default=0)
+        if budget > cap:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new = {budget} tokens "
+                f"exceeds every {decode_role}-rank capacity {cap}; raise "
+                "cache_len/blocks_per_rank or lower max_new_tokens")
+        return self.scheduler.submit(req, now)
+
+    def _dispatch(self, now: float) -> None:
+        """Deal queued requests join-shortest-queue to eligible ranks,
+        stopping at the dispatch window (bounded per-rank backlog)."""
+        while True:
+            w = self.placement.select_submit(self.workers)
+            if w is None or w.load >= self.dispatch_window:
+                return
+            admitted = self.scheduler.admit(now, 1)
+            if not admitted:
+                return
+            w.submit(admitted[0], now)
+
+    # -- the migrate hop (disaggregated only) ------------------------------
+    def _migrate(self, now: float) -> None:
+        """Move prefill-complete requests whose decode rank can post
+        the receive. Head-of-line within each prefill rank, mirroring
+        ``CellQueueScheduler.admit`` one hop down: when the oldest held
+        handoff fits no decode rank, migration for that rank defers
+        entirely — later (smaller) handoffs must not keep taking the
+        blocks the stalled one is waiting for, starving it without
+        bound while its prompt blocks stay leased at the prefill rank."""
+        for w in self.workers:
+            if w.role != "prefill":
+                continue
+            held = []
+            pending = w.engine.take_handoffs()
+            for i, h in enumerate(pending):
+                budget = h.req.prompt_len + h.req.max_new_tokens
+                d = self.placement.select_decode(self.workers, budget)
+                if d is None:
+                    held.extend(pending[i:])   # FIFO: defer the rest too
+                    break
+                slot = None
+                try:
+                    slot, dst_blocks = d.engine.begin_import(h.req)
+                    state_row = w.engine.handoff_state(h.slot)
+                    cost = self.transport.migrate(
+                        w.engine.kv, d.engine.kv, h.blocks,
+                        dst_blocks[:len(h.blocks)])
+                    d.engine.finish_import(slot, h, state_row, now)
+                except BaseException:
+                    # an error mid-migration must not lose in-flight
+                    # requests: undo the posted receive and put this
+                    # handoff (and everything after it, FIFO) back on
+                    # hold — the source rows/blocks are still leased
+                    # and intact (migration only reads them), so the
+                    # whole handoff is retryable
+                    if slot is not None:
+                        d.engine.kv.free(slot)
+                    w.engine.ready_handoffs.extend(pending[i:])
+                    raise
+                w.engine.release_handoff(h.slot)
+                h.req.decode_rank = d.rank
+                h.req.kv_migration_s = cost
+                h.req.kv_blocks_moved = len(h.blocks)
+                w.n_migrated_out += 1
+                d.n_migrated_in += 1
+            w.engine.ready_handoffs.extend(held)
+
+    # -- micro-step --------------------------------------------------------
+    def step(self, now: float = 0.0) -> List[ServeRequest]:
+        """One fabric micro-step: dispatch, advance every rank, migrate.
+        Returns the requests that finished anywhere this step."""
+        self._dispatch(now)
+        finished: List[ServeRequest] = []
+        for w in self.workers:
+            finished.extend(w.step(now))
+        if self.placement.needs_migration:
+            self._migrate(now)
+        self.finished.extend(finished)
+        self.total_steps += 1
+        return finished
+
+    @property
+    def idle(self) -> bool:
+        return (self.scheduler.num_waiting == 0
+                and all(w.idle for w in self.workers))
+
+    # -- reporting ---------------------------------------------------------
+    def stats(self) -> Dict:
+        """Aggregate fabric measurements: router-level latency/TTFT
+        percentiles over every finished request, the dispatch hop's
+        admission accounting, per-rank utilization rows, and (disagg)
+        the KV-migration rows."""
+        out = latency_stats_over(self.finished)
+        log = self.scheduler.req_log
+        out.update(
+            placement=self.placement.name,
+            ranks=float(self.ranks),
+            fabric_steps=float(self.total_steps),
+            router_eager_admits=float(self.scheduler.n_eager_admits),
+            router_deferred=float(self.scheduler.n_deferred),
+            router_dispatch_cost_us=1e6
+            * self.scheduler.modeled_admit_cost_s,
+            # trial-scoped census from the dispatch hop's rid-keyed
+            # accounting map: everything submitted this trial, what is
+            # still somewhere in the fabric, and the arrival window
+            router_submitted=float(len(log)),
+            router_in_flight=float(sum(1 for r in log.values()
+                                       if r.state != "done")),
+        )
+        if log:
+            arr = [r.arrival for r in log.values()]
+            out["arrival_span_s"] = max(arr) - min(arr)
+        out["per_rank"] = [w.utilization() for w in self.workers]
+        if self.transport is not None:
+            out.update(self.transport.stats())
+            mig = [r.kv_migration_s for r in self.finished
+                   if r.kv_blocks_moved > 0]
+            if mig:
+                out["kv_migration_p50_us"] = 1e6 * float(
+                    np.percentile(mig, 50))
+                out["kv_migration_p95_us"] = 1e6 * float(
+                    np.percentile(mig, 95))
+        return out
+
+    # -- lifecycle ---------------------------------------------------------
+    def reset(self) -> None:
+        """Post-warm-up clean slate across the whole fabric: router
+        queue + per-request accounting maps, every rank's engine and
+        counters, migration accounting. Compiled programs survive."""
+        self.scheduler.reset()
+        for w in self.workers:
+            w.reset()
+        if self.transport is not None:
+            self.transport.reset()
+        self.finished = []
+        self.total_steps = 0
+
+    def close(self) -> None:
+        """Finish/free the root threadcomm if this fabric owns it."""
+        if self._owns_comm:
+            self.comm.finish()
+            self.comm.free()
+            self._owns_comm = False

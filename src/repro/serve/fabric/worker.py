@@ -1,0 +1,99 @@
+"""Engine rank of the serving fabric (DESIGN.md §10): one paged
+``ContinuousEngine`` bound to its own derived communication context and
+``CommStream`` pair, plus the per-rank accounting the router aggregates
+(load for join-shortest-queue, utilization for the bench artifact).
+
+The worker is deliberately thin — the engine already is the serving
+loop; the worker is the *rank* wrapper: identity, role, dispatch
+counters, and the load metric the placement policies compare. This is
+the paper's thread-rank shape: each worker is an independent rank of
+the serving threadcomm with its own stream-bound channel, so nothing a
+worker does serializes against its peers.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.serve.engine import ContinuousEngine
+from repro.serve.scheduler import ServeRequest
+
+
+class EngineWorker:
+    """One engine rank: a ``ContinuousEngine`` plus rank accounting."""
+
+    def __init__(self, rank: int, role: str, engine: ContinuousEngine,
+                 comm=None):
+        self.rank = int(rank)
+        self.role = role
+        self.engine = engine
+        self.comm = comm
+        # -- per-rank accounting (the router's utilization rows) --
+        self.total_steps = 0
+        self.busy_steps = 0
+        self.n_dispatched = 0      # requests routed here by the router
+        self.n_migrated_out = 0    # prefill rank: handoffs shipped
+        self.n_migrated_in = 0     # decode rank: handoffs received
+        self.n_finished = 0
+        self.tokens_out = 0        # generated tokens of requests finished here
+
+    # -- intake ------------------------------------------------------------
+    def submit(self, req: ServeRequest, now: float = 0.0) -> str:
+        """Accept a router dispatch into this rank's engine scheduler."""
+        req.rank = self.rank
+        self.n_dispatched += 1
+        return self.engine.submit(req, now)
+
+    # -- load metric (join-shortest-queue input) ---------------------------
+    @property
+    def load(self) -> int:
+        """Requests this rank is responsible for right now: queued in
+        its engine scheduler plus live in its KV pool (held handoffs
+        keep their rows leased, so they count as live until migrated —
+        exactly the backpressure the prefill JSQ should see)."""
+        e = self.engine
+        return e.scheduler.num_waiting + e.kv.num_live
+
+    @property
+    def idle(self) -> bool:
+        return self.engine.idle and not self.engine.ready_handoffs
+
+    # -- micro-step --------------------------------------------------------
+    def step(self, now: float = 0.0) -> List[ServeRequest]:
+        busy = not self.idle
+        finished = self.engine.step(now)
+        self.total_steps += 1
+        self.busy_steps += int(busy)
+        self.n_finished += len(finished)
+        self.tokens_out += sum(r.generated for r in finished)
+        return finished
+
+    # -- reporting ---------------------------------------------------------
+    def utilization(self) -> dict:
+        """One per-rank row of the fabric bench artifact."""
+        return {
+            "rank": self.rank,
+            "role": self.role,
+            "steps": float(self.total_steps),
+            "busy_steps": float(self.busy_steps),
+            "utilization": (self.busy_steps / self.total_steps
+                            if self.total_steps else 0.0),
+            "dispatched": float(self.n_dispatched),
+            "migrated_in": float(self.n_migrated_in),
+            "migrated_out": float(self.n_migrated_out),
+            "finished": float(self.n_finished),
+            "tokens": float(self.tokens_out),
+        }
+
+    def reset(self) -> None:
+        """Post-warm-up clean slate: engine state AND rank accounting
+        (a warm trial's busy steps must not pollute the measured
+        utilization rows)."""
+        self.engine.reset()
+        self.total_steps = 0
+        self.busy_steps = 0
+        self.n_dispatched = 0
+        self.n_migrated_out = 0
+        self.n_migrated_in = 0
+        self.n_finished = 0
+        self.tokens_out = 0

@@ -62,6 +62,11 @@ class ServeRequest:
     # decoding -> done; monolithic admission skips straight to decoding
     state: str = "queued"
     prefill_chunks: int = 0               # chunk dispatches this rode in
+    # -- stamped by the serving fabric (DESIGN.md §10) --
+    rank: int = -1                        # engine rank that served/prefilled
+    decode_rank: int = -1                 # disagg: rank that decoded
+    kv_migration_s: float = 0.0           # modeled KV-handoff latency
+    kv_blocks_moved: int = 0              # blocks migrated for this request
     submit_time: Optional[float] = None
     admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
@@ -122,6 +127,16 @@ class CellQueueScheduler:
         self._overflow: Deque[ServeRequest] = deque()   # eager, pool full
         self._rendezvous: Deque[ServeRequest] = deque() # 1-copy sized
         self.finished: List[ServeRequest] = []
+        # per-request accounting map, keyed by rid: every request
+        # submitted this trial (arrival and all lifecycle stamps ride
+        # on the record itself). The fabric router reads it from its
+        # dispatch-hop scheduler for trial-scoped bookkeeping
+        # (in-flight census, arrival span — ServingFabric.stats()); it
+        # lives exactly one trial, like `finished`. rids restart at 0
+        # every trial, so reset() MUST clear it — a leftover warm-up
+        # entry would alias the real request with the same rid and leak
+        # its arrival/accounting into the next trial's stats.
+        self.req_log: Dict[int, ServeRequest] = {}
         # counters for the driver's accounting rows
         self.n_submitted = 0
         self.n_eager_admits = 0       # buffered straight into cells
@@ -137,6 +152,8 @@ class CellQueueScheduler:
         self._overflow.clear()
         self._rendezvous.clear()
         self.finished = []
+        self.req_log.clear()    # rid-keyed: would alias the next
+                                # trial's requests (rids restart at 0)
         self.n_submitted = 0
         self.n_eager_admits = 0
         self.n_deferred = 0
@@ -178,6 +195,7 @@ class CellQueueScheduler:
         (``"cells" | "overflow" | "rendezvous"``)."""
         proto = self._classify(req, now)
         self.n_submitted += 1
+        self.req_log[req.rid] = req
         req.state = "queued"
         if proto in EAGER_CLASS and req.cells <= self.num_cells:
             if req.cells <= self.cells_free:
@@ -260,27 +278,35 @@ class CellQueueScheduler:
 
     def latency_stats(self) -> Dict[str, float]:
         """Percentiles over finished requests (seconds)."""
-        if not self.finished:
-            return {}
-        lat = np.array([r.latency for r in self.finished])
-        qd = np.array([r.queue_delay for r in self.finished])
-        toks = int(sum(r.generated for r in self.finished))
-        out = {
-            "n": float(len(lat)),
-            "latency_p50_s": float(np.percentile(lat, 50)),
-            "latency_p95_s": float(np.percentile(lat, 95)),
-            "latency_mean_s": float(lat.mean()),
-            "queue_delay_p50_s": float(np.percentile(qd, 50)),
-            "queue_delay_p95_s": float(np.percentile(qd, 95)),
-            "tokens": float(toks),
-        }
-        ttft = np.array([r.ttft for r in self.finished
-                         if r.first_token_time is not None])
-        if ttft.size:
-            out["ttft_p50_s"] = float(np.percentile(ttft, 50))
-            out["ttft_p95_s"] = float(np.percentile(ttft, 95))
-            out["ttft_mean_s"] = float(ttft.mean())
-        return out
+        return latency_stats_over(self.finished)
+
+
+def latency_stats_over(finished: List[ServeRequest]) -> Dict[str, float]:
+    """Latency/TTFT percentiles over any finished-request collection —
+    one scheduler's ``finished`` list, or the union a fabric router
+    gathers across its engine ranks (every rank stamps the same
+    per-request fields, so aggregation is just a bigger list)."""
+    if not finished:
+        return {}
+    lat = np.array([r.latency for r in finished])
+    qd = np.array([r.queue_delay for r in finished])
+    toks = int(sum(r.generated for r in finished))
+    out = {
+        "n": float(len(lat)),
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p95_s": float(np.percentile(lat, 95)),
+        "latency_mean_s": float(lat.mean()),
+        "queue_delay_p50_s": float(np.percentile(qd, 50)),
+        "queue_delay_p95_s": float(np.percentile(qd, 95)),
+        "tokens": float(toks),
+    }
+    ttft = np.array([r.ttft for r in finished
+                     if r.first_token_time is not None])
+    if ttft.size:
+        out["ttft_p50_s"] = float(np.percentile(ttft, 50))
+        out["ttft_p95_s"] = float(np.percentile(ttft, 95))
+        out["ttft_mean_s"] = float(ttft.mean())
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -331,10 +357,26 @@ def make_trace(n_requests: int, *, prompt_len, max_new,
 
 
 def shard_trace(trace: List[TraceEntry], replica: int,
-                n_replicas: int) -> List[TraceEntry]:
-    """Round-robin data-parallel fan-out: the slice of the trace replica
-    ``replica`` of ``n_replicas`` serves (each replica is a ``Comm.split``
-    family of the serving threadcomm — DESIGN.md §8)."""
+                n_replicas: int, seed: Optional[int] = None
+                ) -> List[TraceEntry]:
+    """Data-parallel fan-out: the slice of the trace replica ``replica``
+    of ``n_replicas`` serves (each replica is a ``Comm.split`` family of
+    the serving threadcomm — DESIGN.md §8).
+
+    ``seed=None`` is the deterministic round-robin deal (entry ``i`` to
+    replica ``i % n_replicas``). With a seed, entries are dealt through a
+    seeded permutation instead — still an exact partition (every replica
+    computes the same permutation from the same seed, so the shards stay
+    disjoint and exhaustive with no coordination), but decorrelated from
+    any periodic structure in the trace (e.g. the 16/256 prompt-length
+    interleave, which round-robin would hand entirely to one replica
+    when ``n_replicas`` divides the cycle length). Arrival order within a
+    shard is preserved."""
     if not 0 <= replica < n_replicas:
         raise ValueError(f"replica {replica} out of range({n_replicas})")
-    return [e for i, e in enumerate(trace) if i % n_replicas == replica]
+    if seed is None:
+        return [e for i, e in enumerate(trace) if i % n_replicas == replica]
+    perm = np.random.default_rng(seed).permutation(len(trace))
+    mine = sorted(int(perm[j]) for j in range(replica, len(trace),
+                                              n_replicas))
+    return [trace[i] for i in mine]

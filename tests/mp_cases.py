@@ -676,6 +676,73 @@ def case_serve_replica_fanout():
     print("CASE-OK")
 
 
+def case_comm_waitall_mixed():
+    """``waitall`` over MIXED send/recv requests on a split sub-comm —
+    the fabric's KV-handoff pattern (DESIGN.md §10): a source rank
+    streams payload pieces to its partner over a dedicated stream while
+    an independent allreduce request rides alongside, and the single
+    ``waitall`` completion point covers them all in issue order."""
+    from repro.core.comm import threadcomm_init, testall, waitall
+
+    n = 8
+    mesh = _flat_mesh(n)
+    tc = threadcomm_init(mesh, process_axes=(), thread_axes=("ranks",))
+    with tc.start():
+        # two split families of 4 ranks each (contiguous halves — the
+        # merged-ring GroupComm path, like the fabric's engine comms)
+        color = [r // 4 for r in range(n)]
+        sub = tc.split(color)
+        assert len(sub.families()) == 2 and sub.size == 4
+
+        x = jnp.arange(float(n)) + 1.0
+        # local-rank pairs: 0->1, 1->0 (the prefill->decode hop and the
+        # decode rank's ack), applied in each family concurrently
+        pairs = [(0, 1), (1, 0)]
+
+        def handoff(v):
+            with sub.stream("kv-migrate") as s:
+                reqs = []
+                # "blocks": three chunked isends of growing payloads —
+                # forced one_copy, the rendezvous-class a KV block rides
+                for piece in (v, 2 * v, 3 * v):
+                    reqs.append(sub.isend(piece, pairs,
+                                          force_protocol="one_copy"))
+                # a recv handle for the same round (SPMD: the matching
+                # receive of the fused permute) + an unrelated collective
+                reqs.append(sub.irecv(4 * v, pairs))
+                reqs.append(sub.iallreduce(v))
+                assert len(s._requests) == 5
+                assert testall(reqs)       # traced: all scheduled
+                out = waitall(reqs)        # one completion point, in order
+            # every one_copy message paid its request object (§3.2: the
+            # request-free path is eager_fast only)
+            assert all(r.model_overhead_s > 0.0 for r in reqs[:3])
+            return sum(out[:4]) + out[4]
+        got = tc.run(handoff, x)
+
+        xs = np.asarray(x)
+        want = np.zeros(n)
+        for fam in sub.families():
+            fam_sum = xs[list(fam)].sum()
+            for src, dst in pairs:
+                # pieces 1x,2x,3x,4x of the src rank land on dst
+                want[fam[dst]] += 10 * xs[fam[src]]
+            for r in fam:
+                want[r] += fam_sum                    # the allreduce ride
+        assert np.allclose(np.asarray(got), want), (got, want)
+
+    # derived comm dies with the activation window (the fabric's close())
+    survived = False
+    try:
+        tc.run(lambda v: sub.isend(v, pairs).wait(), x)
+        survived = True
+    except Exception:
+        pass
+    assert not survived, "stale sub-comm survived finish"
+    tc.free()
+    print("CASE-OK")
+
+
 CASES = {k[5:]: v for k, v in list(globals().items())
          if k.startswith("case_")}
 

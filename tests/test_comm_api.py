@@ -32,6 +32,13 @@ def test_serve_replica_fanout_split():
     run_case("serve_replica_fanout", ndev=8)
 
 
+def test_waitall_mixed_send_recv_on_split_subcomm():
+    """The fabric's KV-handoff pattern (DESIGN.md §10): waitall over a
+    mixture of isend/irecv and collective requests issued on one stream
+    of a split sub-comm, with epoch invalidation at finish."""
+    run_case("comm_waitall_mixed", ndev=8)
+
+
 # ---------------------------------------------------------------------------
 # host-side lifecycle rules (single device, no shard_map)
 # ---------------------------------------------------------------------------

@@ -155,6 +155,23 @@ def test_scheduler_reset_clears_queues_and_accounting():
     assert s.submit(_req(2, 16), 3.0) == "cells"    # still usable
 
 
+def test_scheduler_reset_clears_per_request_map():
+    """Satellite bugfix: the rid-keyed arrival/accounting map must die
+    at reset — every trial restarts rids at 0 (run_traffic's warm-up
+    does exactly this), so a surviving warm-up entry would alias the
+    real request with the same rid and leak its arrival into the next
+    trial's accounting."""
+    s = CellQueueScheduler(num_cells=4)
+    warm = _req(0, 16, arrival=123.0)
+    s.submit(warm, 123.0)
+    assert s.req_log[0] is warm and s.req_log[0].arrival == 123.0
+    s.reset()
+    assert s.req_log == {}
+    real = _req(0, 16, arrival=0.5)          # same rid, next trial
+    s.submit(real, 0.5)
+    assert s.req_log[0] is real and s.req_log[0].arrival == 0.5
+
+
 def test_fifo_within_class_and_accounting():
     s = CellQueueScheduler(num_cells=16)
     for i in range(4):
@@ -257,6 +274,32 @@ def test_make_trace_kinds_and_shard():
     assert not {id(e) for e in s0} & {id(e) for e in s1}
     with pytest.raises(ValueError):
         shard_trace(tr, 2, 2)
+
+
+def test_shard_trace_seeded_exact_partition():
+    """Satellite: seeded fan-out is deterministic and partitions the
+    trace exactly — no dropped or duplicated request across replicas,
+    for any replica count, with arrival order preserved per shard."""
+    tr = make_trace(13, prompt_len=(16, 256), max_new=4,
+                    arrival="poisson", rate=50.0, seed=3)
+    for n_rep in (1, 2, 3, 5):
+        shards = [shard_trace(tr, i, n_rep, seed=42) for i in range(n_rep)]
+        ids = [id(e) for s in shards for e in s]
+        assert len(ids) == len(tr)                 # nothing dropped
+        assert set(ids) == {id(e) for e in tr}     # nothing duplicated
+        for s in shards:
+            assert all(b.arrival >= a.arrival for a, b in zip(s, s[1:]))
+        # deterministic: same seed -> same deal, every replica agrees
+        again = [shard_trace(tr, i, n_rep, seed=42) for i in range(n_rep)]
+        assert all([id(e) for e in a] == [id(e) for e in b]
+                   for a, b in zip(shards, again))
+    # the seeded deal decorrelates from the 2-cycle prompt-length
+    # interleave that round-robin hands entirely to one replica
+    rr = shard_trace(tr, 0, 2)
+    assert {e.prompt_len for e in rr} == {16}
+    sd0, sd1 = (shard_trace(tr, i, 2, seed=0) for i in range(2))
+    assert {e.prompt_len for e in sd0} == {16, 256}
+    assert {e.prompt_len for e in sd1} == {16, 256}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,32 @@
+"""Static and runtime invariant analysis (DESIGN.md §11).
+
+Two halves:
+
+* :mod:`repro.analysis.lint` / :mod:`repro.analysis.rules` — AST lint
+  for the repo-specific invariants (drop-mode scatters, jit donation,
+  Request lifecycles, stream ordering, host-sync discipline). Run
+  ``python -m repro.analysis.lint src/``; CI gates on a clean tree.
+* :mod:`repro.analysis.sanitizer` — the runtime threadcomm sanitizer
+  (``REPRO_SANITIZE=1``): happens-before tracking over comm ops
+  (:mod:`repro.analysis.hb`), lease provenance over the serving pools
+  (:mod:`repro.analysis.ledger`), unmatched requests at ``finish()``,
+  accidental-serialization hazards, migration completeness.
+
+This package must stay import-light: ``core/comm.py`` and the serving
+pools import :mod:`repro.analysis.sanitizer` at module load to reach
+their hooks, so nothing here may import back into ``repro.core`` or
+``repro.serve``.
+"""
+
+from repro.analysis.sanitizer import (SanitizerError, SanitizerFinding,
+                                      ThreadSanitizer, active, install,
+                                      uninstall)
+
+__all__ = [
+    "SanitizerError",
+    "SanitizerFinding",
+    "ThreadSanitizer",
+    "active",
+    "install",
+    "uninstall",
+]

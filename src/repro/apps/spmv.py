@@ -11,11 +11,8 @@ n² × 4B, comfortably a few cells).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.core import p2p

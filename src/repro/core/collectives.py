@@ -22,7 +22,6 @@ from __future__ import annotations
 
 from typing import Sequence, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax

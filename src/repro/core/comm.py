@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +43,9 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+# runtime threadcomm sanitizer (REPRO_SANITIZE=1, DESIGN.md §11): every
+# hook below is a single global read + None check when disabled
+from repro.analysis.sanitizer import active as _san_active
 from repro.core import collectives as coll
 from repro.core import p2p as p2p_mod
 from repro.core import protocol
@@ -86,6 +89,9 @@ class Request:
         self._done = False
         self.stream = stream
         self.model_overhead_s = model_overhead_s
+        san = _san_active()
+        if san is not None:
+            san.on_request(self)
 
     def _check_window(self):
         self.comm._root._check_not_freed()
@@ -100,6 +106,9 @@ class Request:
         wait() is the completion point — not at a later use site."""
         self._check_window()
         self._done = True
+        san = _san_active()
+        if san is not None:
+            san.on_request_complete(self)
         value = self._value
         leaves = jax.tree_util.tree_leaves(value)
         if not any(isinstance(l, jax.core.Tracer) for l in leaves):
@@ -117,6 +126,9 @@ class Request:
                     for l in leaves)
         if ready:
             self._done = True
+            san = _san_active()
+            if san is not None:
+                san.on_request_complete(self)
             return True, self._value
         return False, None
 
@@ -153,6 +165,9 @@ class CommStream:
 
     def __enter__(self) -> "CommStream":
         self.comm._root._check_active()
+        san = _san_active()
+        if san is not None:       # program order flows into the stream
+            san.on_stream_enter(self)
         self.comm._root._stream_stack.append(self)
         return self
 
@@ -800,6 +815,9 @@ class ThreadComm(Comm):
         self._check_not_freed()
         if not self._active:
             raise ThreadCommError("finish without a matching start")
+        san = _san_active()
+        if san is not None:       # pending requests die with the window
+            san.on_finish(self)
         self._active = False
         self._attrs.clear()        # attribute lifetime = activation window
         self._stream_stack.clear()

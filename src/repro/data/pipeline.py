@@ -15,11 +15,11 @@ example (pure-uniform tokens have irreducible loss = log V).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 
-from repro.config import ModelConfig, ShapeConfig
+from repro.config import ModelConfig
 
 
 @dataclass

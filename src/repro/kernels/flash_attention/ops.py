@@ -10,7 +10,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
 

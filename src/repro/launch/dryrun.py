@@ -163,7 +163,6 @@ def build_cell(arch: str, shape_name: str, mesh_name: str, *,
             6 * cfg.active_param_count() * tokens / mesh_cfg.num_devices)
         return step, (state_sds, bspec), meta
 
-    from repro.models.layers import dtype_of
     from repro.models.registry import cache_len_for
     cache_len = cache_len_for(cfg, shape, scfg)
     meta["cache_len"] = cache_len

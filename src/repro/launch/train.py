@@ -11,7 +11,6 @@ CPU use --smoke (reduced same-family configs) with a small mesh, e.g.:
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax

@@ -9,8 +9,6 @@ K/V computed once at prefill) + learned positional embeddings.
 
 from __future__ import annotations
 
-from typing import Any, Dict
-
 import jax
 import jax.numpy as jnp
 from jax import lax

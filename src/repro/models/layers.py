@@ -9,7 +9,6 @@ softmax statistics are computed in float32.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -145,7 +145,6 @@ def ssm_apply(p, x, cfg, initial_state=None, return_state=False):
          ).astype(cd)
     out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
     if return_state:
-        conv_dim = di + 2 * n
         k = cfg.ssm_conv
         # conv state: last k-1 pre-activation xbc inputs
         zxbc_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)[1]

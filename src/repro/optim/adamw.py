@@ -9,7 +9,7 @@ falls out of FSDP-sharded params for free).
 
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

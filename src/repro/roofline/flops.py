@@ -48,8 +48,6 @@ def _per_token_matmul_flops(cfg: ModelConfig) -> float:
     if cfg.is_encoder_decoder:
         # encoder blocks + decoder cross-attention projections (per dec tok)
         h, hd = cfg.num_heads, cfg.head_dim
-        enc_per_tok = (2 * 4 * d * h * hd + 2 * 2 * d * f) \
-            * cfg.num_encoder_layers
         total += 2 * 2 * d * h * hd * cfg.num_layers       # x-attn q & out
         # encoder runs over encoder_seq tokens regardless of decoder length;
         # accounted separately in cell_compute (enc_tokens)

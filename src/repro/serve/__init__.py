@@ -4,7 +4,8 @@ from repro.serve.engine import (ContinuousEngine, Engine, KVHandoff,  # noqa: F4
 from repro.serve.fabric import (DisaggregatedPlacement, EngineWorker,  # noqa: F401
                                 KVBlockTransport, ReplicatedPlacement,
                                 ServingFabric)
-from repro.serve.kv_cache import SlotError, SlotKVCache  # noqa: F401
+from repro.serve.kv_cache import (LeaseLeakError, LeaseLeakWarning,  # noqa: F401
+                                  SlotError, SlotKVCache)
 from repro.serve.scheduler import (CellQueueScheduler, ServeRequest,  # noqa: F401
                                    TraceEntry, latency_stats_over,
                                    make_trace, shard_trace)

@@ -34,13 +34,15 @@ one out; both pools now agree).
 
 from __future__ import annotations
 
+import warnings
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.kv_cache import SlotError
+from repro.analysis.sanitizer import active as _san_active
+from repro.serve.kv_cache import LeaseLeakError, LeaseLeakWarning, SlotError
 
 
 class BlockPool:
@@ -92,6 +94,9 @@ class BlockPool:
             self._ref[b] = 1
             self._owner[b] = owner
             self._last_owner[b] = owner
+        san = _san_active()
+        if san is not None:       # lease ledger records the alloc site
+            san.on_lease_alloc(self, blocks, owner)
         return blocks
 
     def ref(self, block: int) -> None:
@@ -99,21 +104,52 @@ class BlockPool:
         if self._ref[block] < 1:
             raise SlotError(f"ref of free block {block}")
         self._ref[block] += 1
+        san = _san_active()
+        if san is not None:
+            san.on_lease_ref(self, block)
 
     def free(self, blocks) -> None:
         """Drop one reference per block; blocks reaching zero return to
         the free list. Double-free names the last owner."""
+        san = _san_active()
         for b in blocks:
             if self._ref[b] < 1:
-                raise SlotError(
-                    f"double free of block {b} "
-                    f"(last owner {self._last_owner[b]!r})")
+                msg = (f"double free of block {b} "
+                       f"(last owner {self._last_owner[b]!r})")
+                if san is not None:
+                    # the ledger remembers where the block was first
+                    # allocated and first freed — the half of the story
+                    # the refcount alone can't tell
+                    msg += "; " + san.on_double_free(
+                        self, b, self._last_owner[b])
+                raise SlotError(msg)
             self._ref[b] -= 1
             if self._ref[b] == 0:
                 self._owner[b] = None
                 self._free.append(b)
+            if san is not None:
+                san.on_lease_release(self, b)
 
-    def reset(self) -> None:
+    def reset(self, *, strict: bool = False) -> None:
+        """Wipe every lease. Blocks still live are leaks — requests that
+        never reached ``free`` — and are named: warn
+        (:class:`~repro.serve.kv_cache.LeaseLeakWarning`) by default,
+        raise (:class:`~repro.serve.kv_cache.LeaseLeakError`) under
+        ``strict=True``."""
+        leaked = [(b, self._owner[b]) for b in range(self.num_blocks)
+                  if self._ref[b] > 0]
+        san = _san_active()
+        if san is not None:       # ledger adds allocation provenance
+            san.on_pool_reset(self)
+        if leaked:
+            msg = (f"reset with {len(leaked)} live block lease(s): "
+                   + ", ".join(f"block {b} (owner {o!r})"
+                               for b, o in leaked[:8])
+                   + (f", ... {len(leaked) - 8} more" if len(leaked) > 8
+                      else ""))
+            if strict:
+                raise LeaseLeakError(msg)
+            warnings.warn(msg, LeaseLeakWarning, stacklevel=2)
         self._free = list(range(self.num_blocks - 1, -1, -1))
         self._ref[:] = 0
         self._owner = [None] * self.num_blocks
@@ -296,9 +332,27 @@ class PagedKVCache:
         return int(sum(x.nbytes
                        for x in jax.tree_util.tree_leaves(self._buf)))
 
-    def reset(self) -> None:
-        """Return every row and block to the free pools."""
-        self.pool.reset()
+    def reset(self, *, strict: bool = False) -> None:
+        """Return every row and block to the free pools. Rows still
+        occupied are lease leaks and are named (warn, or raise under
+        ``strict=True``); the block pool runs the same check."""
+        leaked = [(s, self._owner[s]) for s in range(self.num_slots)
+                  if self._owner[s] is not None]
+        if leaked:
+            msg = (f"reset with {len(leaked)} live request row(s): "
+                   + ", ".join(f"row {s} (owner {o!r})" for s, o in leaked))
+            if strict:
+                raise LeaseLeakError(msg)
+            warnings.warn(msg, LeaseLeakWarning, stacklevel=2)
+        if leaked:
+            # the row check already named this reset's leak; the pool's
+            # own check would re-name the same leases block-by-block
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", LeaseLeakWarning)
+                self.pool.reset()
+        else:
+            # rows clean, but prefix-shared refs can outlive their rows
+            self.pool.reset(strict=strict)
         self._tables[:] = -1
         self._tables_dev = None
         self._free_rows = list(range(self.num_slots - 1, -1, -1))

@@ -363,11 +363,14 @@ class ContinuousEngine:
         token with the request's own key, install (tok, pos, key, temp)."""
         key, sub = jax.random.split(key)
         tok0 = _sample_rows(logits, sub[None], temp[None])[0]
+        # scatter-drop: slot-indexed writes carry explicit drop semantics
+        # like every other slot scatter, so a bad index writes nothing
+        # instead of clamping onto a live row
         state = {
-            "tok": state["tok"].at[slot].set(tok0),
-            "pos": state["pos"].at[slot].set(pos0),
-            "keys": state["keys"].at[slot].set(key),
-            "temp": state["temp"].at[slot].set(temp),
+            "tok": state["tok"].at[slot].set(tok0, mode="drop"),
+            "pos": state["pos"].at[slot].set(pos0, mode="drop"),
+            "keys": state["keys"].at[slot].set(key, mode="drop"),
+            "temp": state["temp"].at[slot].set(temp, mode="drop"),
         }
         return state, tok0
 
@@ -375,7 +378,9 @@ class ContinuousEngine:
     def _park_impl(state, slot):
         """Park a retired slot's position: its decode-vmap row keeps
         computing, but the drop-mode cache writes discard everything."""
-        return {**state, "pos": state["pos"].at[slot].set(PARK_POS)}
+        # scatter-drop: same drop discipline as the cache writes
+        return {**state,
+                "pos": state["pos"].at[slot].set(PARK_POS, mode="drop")}
 
     @staticmethod
     def _import_state_impl(state, slot, tok, pos, key, temp):
@@ -383,11 +388,12 @@ class ContinuousEngine:
         exact (tok, pos, key, temp) the source rank's finalize produced,
         no resampling (the first token was already drawn there; replaying
         the draw here would fork the request's PRNG chain)."""
+        # scatter-drop: slot-indexed writes carry explicit drop semantics
         return {
-            "tok": state["tok"].at[slot].set(tok),
-            "pos": state["pos"].at[slot].set(pos),
-            "keys": state["keys"].at[slot].set(key),
-            "temp": state["temp"].at[slot].set(temp),
+            "tok": state["tok"].at[slot].set(tok, mode="drop"),
+            "pos": state["pos"].at[slot].set(pos, mode="drop"),
+            "keys": state["keys"].at[slot].set(key, mode="drop"),
+            "temp": state["temp"].at[slot].set(temp, mode="drop"),
         }
 
     @staticmethod
@@ -823,19 +829,22 @@ class ContinuousEngine:
         self._slot_req[slot] = req
         self._slot_out[slot] = handoff.out
 
-    def reset(self) -> None:
+    def reset(self, *, strict: bool = False) -> None:
         """Return the engine to its post-construction state: every slot
         freed, device-side sampling/position state re-zeroed (positions
         parked), scheduler queues and accounting cleared. Used by traffic
         drivers after jit warm-up so warm requests leave no stale device
-        state or accounting behind (compiled programs are kept)."""
+        state or accounting behind (compiled programs are kept).
+
+        Slots still holding requests are lease leaks: named via
+        ``LeaseLeakWarning``, or ``LeaseLeakError`` when ``strict``."""
         S = self.kv.num_slots
         self._state = self._fresh_state(S)
         self._slot_req = [None] * S
         self._slot_out = [None] * S
         self._prefilling.clear()
         self.ready_handoffs.clear()
-        self.kv.reset()
+        self.kv.reset(strict=strict)
         self.scheduler.reset()
         self.peak_live = 0
         self._resident_tok_sum = 0

@@ -30,6 +30,7 @@ eligible (:mod:`~repro.serve.fabric.placement`):
 
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -38,6 +39,7 @@ import numpy as np
 from repro.core.comm import ThreadComm, threadcomm_init
 from repro.core.compat import make_mesh
 from repro.serve.engine import ContinuousEngine
+from repro.serve.kv_cache import LeaseLeakError, LeaseLeakWarning
 from repro.serve.fabric.placement import Placement, make_placement
 from repro.serve.fabric.transport import KVBlockTransport
 from repro.serve.fabric.worker import EngineWorker
@@ -275,9 +277,41 @@ class ServingFabric:
         self.finished = []
         self.total_steps = 0
 
-    def close(self) -> None:
-        """Finish/free the root threadcomm if this fabric owns it."""
-        if self._owns_comm:
-            self.comm.finish()
-            self.comm.free()
-            self._owns_comm = False
+    def close(self, *, strict: bool = False) -> None:
+        """Finish/free the root threadcomm if this fabric owns it —
+        after a fabric-wide lease census. Requests still in flight
+        (dispatch log), KV rows still leased on any rank, or handoffs
+        still awaiting migration are leaks at close: each is named via
+        ``LeaseLeakWarning``, or ``LeaseLeakError`` when ``strict``
+        (finish/free still runs, so an owned comm is never stranded)."""
+        leaks: List[str] = []
+        in_flight = sorted(r.rid for r in self.scheduler.req_log.values()
+                           if r.state != "done")
+        if in_flight:
+            leaks.append(f"{len(in_flight)} request(s) in flight at the "
+                         f"router: {', '.join(map(str, in_flight[:8]))}"
+                         + (" ..." if len(in_flight) > 8 else ""))
+        for w in self.workers:
+            live = w.engine.kv.num_live
+            if live:
+                owners = [w.engine.kv.owner(s)
+                          for s in w.engine.kv.live_slots]
+                leaks.append(f"rank {w.rank} ({w.role}) holds {live} "
+                             f"live KV lease(s): owners {owners!r}")
+            if w.engine.ready_handoffs:
+                rids = [h.req.rid for h in w.engine.ready_handoffs]
+                leaks.append(f"rank {w.rank} ({w.role}) holds "
+                             f"{len(rids)} unmigrated handoff(s): "
+                             f"{rids!r}")
+        try:
+            if leaks:
+                msg = ("fabric closed with leaked leases: "
+                       + "; ".join(leaks))
+                if strict:
+                    raise LeaseLeakError(msg)
+                warnings.warn(msg, LeaseLeakWarning, stacklevel=2)
+        finally:
+            if self._owns_comm:
+                self.comm.finish()
+                self.comm.free()
+                self._owns_comm = False

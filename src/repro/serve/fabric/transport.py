@@ -35,6 +35,7 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.sanitizer import active as _san_active
 from repro.core import protocol
 from repro.core.comm import Request, waitall
 
@@ -101,6 +102,9 @@ class KVBlockTransport:
         proto = protocol.select_protocol(nb, interthread=True)
         requests: List[Request] = []
         dst = dst_kv.buffers
+        san = _san_active()
+        if san is not None:
+            san.on_migrate_begin(self, len(src_blocks))
         # the first hop donates the live destination pool, so from here
         # on dst_kv MUST end up pointing at the freshest chain value
         # whatever happens — on an error mid-chain or at completion the
@@ -123,9 +127,18 @@ class KVBlockTransport:
                     self.comm, f"kv_block[{proto}]", probe,
                     stream=self.stream,
                     model_overhead_s=protocol.request_overhead(nb, proto)))
-            waitall(requests)              # completion before install
         finally:
-            dst_kv.swap_buffers(dst)
+            # request-leak: completion must sit on the exception path
+            # too — an error mid-chain used to abandon every block
+            # message already in flight (their Requests died unwaited at
+            # the next finish()); the issued prefix is always valid, so
+            # complete it before the pool install either way
+            try:
+                waitall(requests)          # completion before install
+                if san is not None and len(requests) == len(src_blocks):
+                    san.on_migrate_end(self)
+            finally:
+                dst_kv.swap_buffers(dst)
         moved = len(src_blocks)
         # the model already charges each block's request object inside
         # its per-block message price — the Request.model_overhead_s

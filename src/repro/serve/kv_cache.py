@@ -28,6 +28,7 @@ MPI+Threads*' independent-state rule):
 
 from __future__ import annotations
 
+import warnings
 from typing import Any, List, Optional
 
 import jax
@@ -38,6 +39,17 @@ from jax import lax
 
 class SlotError(RuntimeError):
     """Slot-pool misuse (double free, insert into a free slot, exhaustion)."""
+
+
+class LeaseLeakError(SlotError):
+    """Live leases found where a clean pool was required (``strict=True``
+    reset/close). The message names every leaked owner."""
+
+
+class LeaseLeakWarning(UserWarning):
+    """Live leases found at reset/close (non-strict): the pool is wiped
+    anyway, but the leak — requests that never reached ``free`` — is
+    named so it can't pass silently."""
 
 
 class SlotKVCache:
@@ -207,10 +219,23 @@ class SlotKVCache:
                         raise SlotError(f"insert_at into free slot {s}")
                     self._len[s] = int(n)
 
-    def reset(self) -> None:
+    def reset(self, *, strict: bool = False) -> None:
         """Return every slot to the free pool and zero the page accounting
         (buffer contents are lazily reclaimed: the next occupant either
-        overwrites its slot wholesale or ``reset_slot``s it first)."""
+        overwrites its slot wholesale or ``reset_slot``s it first).
+
+        A reset over live slots is a lease leak — those requests never
+        reached ``free`` — so the leaked owners are named: warn
+        (:class:`LeaseLeakWarning`) by default, raise
+        (:class:`LeaseLeakError`) under ``strict=True``."""
+        leaked = [(s, self._owner[s]) for s in range(self.num_slots)
+                  if self._owner[s] is not None]
+        if leaked:
+            msg = (f"reset with {len(leaked)} live slot lease(s): "
+                   + ", ".join(f"slot {s} (owner {o!r})" for s, o in leaked))
+            if strict:
+                raise LeaseLeakError(msg)
+            warnings.warn(msg, LeaseLeakWarning, stacklevel=2)
         self._free = list(range(self.num_slots - 1, -1, -1))
         self._owner = [None] * self.num_slots
         self._len[:] = 0

@@ -22,12 +22,10 @@ Fault-tolerance hooks: the step function is pure; checkpoint.py snapshots
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import MeshConfig, ModelConfig, TrainConfig
@@ -65,8 +63,6 @@ def make_train_step(model, mesh_cfg: MeshConfig, tcfg: TrainConfig,
     cfg = model.cfg
     lr_fn = cosine_schedule(tcfg.learning_rate, tcfg.warmup_steps,
                             tcfg.total_steps)
-    proc_axes = tuple(mesh_cfg.process_axes)
-
     def loss_and_grads(params, batch):
         k = tcfg.microbatches
         if k <= 1:
@@ -130,7 +126,7 @@ def make_train_step(model, mesh_cfg: MeshConfig, tcfg: TrainConfig,
 
 def make_eval_step(model, mesh_cfg: MeshConfig, mesh=None):
     def eval_step(params, batch):
-        loss, metrics = model.train_loss(params, batch)
+        _, metrics = model.train_loss(params, batch)
         return metrics
     if mesh is None:
         return eval_step

@@ -1,0 +1,348 @@
+"""Static invariant lint (DESIGN.md §11): per-rule positive and negative
+fixtures, pragma suppression, rule selection, and the gate the CI
+``analysis`` job enforces — the repo's own ``src/`` tree lints clean.
+
+Every rule is exercised both ways: the positive fixture must be flagged
+(and must STOP being flagged when the rule is disabled via ``rules=`` —
+the proof the finding comes from that rule and not a neighbour), and the
+negative fixture — the idiomatic correct form — must stay clean.
+"""
+
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import lint_paths, lint_source, main
+from repro.analysis.rules import ALL_RULES, RULES_BY_NAME
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _lint(snippet, rules=None):
+    return lint_source(textwrap.dedent(snippet), "<fixture>", rules=rules)
+
+
+def _rules_hit(snippet, rules=None):
+    return sorted({f.rule for f in _lint(snippet, rules=rules)})
+
+
+def _other_rules(name):
+    return [r.name for r in ALL_RULES if r.name != name]
+
+
+# ---------------------------------------------------------------------------
+# scatter-drop
+# ---------------------------------------------------------------------------
+
+SCATTER_BAD = """
+    def _admit(state, slot, tok):
+        return state["tok"].at[slot].set(tok)
+"""
+
+SCATTER_GOOD = """
+    def _admit(state, slot, tok):
+        return state["tok"].at[slot].set(tok, mode="drop")
+"""
+
+SCATTER_UNRELATED_INDEX = """
+    def shift(x, i):
+        return x.at[i].set(0.0)
+"""
+
+
+def test_scatter_drop_positive():
+    assert _rules_hit(SCATTER_BAD) == ["scatter-drop"]
+
+
+def test_scatter_drop_negative():
+    assert _rules_hit(SCATTER_GOOD) == []
+
+
+def test_scatter_drop_ignores_unrelated_index_names():
+    # only slot/block-table/park-derived indices are in scope
+    assert _rules_hit(SCATTER_UNRELATED_INDEX) == []
+
+
+def test_scatter_drop_disabled():
+    assert _rules_hit(SCATTER_BAD, rules=_other_rules("scatter-drop")) == []
+
+
+# ---------------------------------------------------------------------------
+# donated-use
+# ---------------------------------------------------------------------------
+
+DONATED_BAD = """
+    import jax
+
+    step = jax.jit(_step_impl, donate_argnums=(0,))
+
+    def drive(state, x):
+        new = step(state, x)
+        return new, state["tok"]
+"""
+
+DONATED_GOOD = """
+    import jax
+
+    step = jax.jit(_step_impl, donate_argnums=(0,))
+
+    def drive(state, x):
+        new = step(state, x)
+        return new, new["tok"]
+"""
+
+DONATED_REBIND = """
+    import jax
+
+    step = jax.jit(_step_impl, donate_argnums=(0,))
+
+    def drive(state, x):
+        state = step(state, x)
+        return state["tok"]
+"""
+
+
+def test_donated_use_positive():
+    hits = _lint(DONATED_BAD)
+    assert [f.rule for f in hits] == ["donated-use"]
+    assert "state" in hits[0].message
+
+
+def test_donated_use_negative():
+    assert _rules_hit(DONATED_GOOD) == []
+
+
+def test_donated_use_rebind_revives():
+    # the idiomatic fix: rebind the name to the jit output
+    assert _rules_hit(DONATED_REBIND) == []
+
+
+def test_donated_use_disabled():
+    assert _rules_hit(DONATED_BAD, rules=_other_rules("donated-use")) == []
+
+
+# ---------------------------------------------------------------------------
+# request-leak
+# ---------------------------------------------------------------------------
+
+REQUEST_BAD = """
+    def exchange(comm, x):
+        r = comm.iallreduce(x)
+        return x
+"""
+
+REQUEST_GOOD = """
+    def exchange(comm, x):
+        r = comm.iallreduce(x)
+        return r.wait()
+"""
+
+REQUEST_WAITALL = """
+    def exchange(comm, xs):
+        reqs = []
+        for x in xs:
+            reqs.append(comm.iallreduce(x))
+        waitall(reqs)
+"""
+
+REQUEST_EXC_PATH = """
+    def migrate(comm, xs):
+        reqs = []
+        try:
+            for x in xs:
+                reqs.append(comm.isend(x, pairs))
+            waitall(reqs)
+        finally:
+            cleanup()
+"""
+
+REQUEST_EXC_GOOD = """
+    def migrate(comm, xs):
+        reqs = []
+        try:
+            for x in xs:
+                reqs.append(comm.isend(x, pairs))
+        finally:
+            waitall(reqs)
+"""
+
+
+def test_request_leak_positive():
+    assert _rules_hit(REQUEST_BAD) == ["request-leak"]
+
+
+def test_request_leak_negative():
+    assert _rules_hit(REQUEST_GOOD) == []
+
+
+def test_request_leak_waitall_completes():
+    assert _rules_hit(REQUEST_WAITALL) == []
+
+
+def test_request_leak_exception_path():
+    # completion inside the try body does not cover the exception path
+    hits = _lint(REQUEST_EXC_PATH)
+    assert [f.rule for f in hits] == ["request-leak"]
+    assert "finally" in hits[0].message
+
+
+def test_request_leak_exception_path_fixed():
+    assert _rules_hit(REQUEST_EXC_GOOD) == []
+
+
+def test_request_leak_disabled():
+    assert _rules_hit(REQUEST_BAD, rules=_other_rules("request-leak")) == []
+
+
+# ---------------------------------------------------------------------------
+# stream-order
+# ---------------------------------------------------------------------------
+
+STREAM_BAD = """
+    def overlap(comm, x):
+        with comm.stream("s") as s:
+            y = comm.allreduce(x)
+        return y
+"""
+
+STREAM_GOOD = """
+    def overlap(comm, x):
+        with comm.stream("s") as s:
+            r = comm.iallreduce(x)
+        return r.wait()
+"""
+
+USE_AFTER_FINISH = """
+    def teardown(comm, x):
+        comm.finish()
+        return comm.allreduce(x)
+"""
+
+RESTART_OK = """
+    def teardown(comm, x):
+        comm.finish()
+        comm.start()
+        return comm.allreduce(x)
+"""
+
+
+def test_stream_order_blocking_in_stream():
+    assert _rules_hit(STREAM_BAD) == ["stream-order"]
+
+
+def test_stream_order_nonblocking_ok():
+    assert _rules_hit(STREAM_GOOD) == []
+
+
+def test_stream_order_use_after_finish():
+    assert _rules_hit(USE_AFTER_FINISH) == ["stream-order"]
+
+
+def test_stream_order_restart_reopens():
+    assert _rules_hit(RESTART_OK) == []
+
+
+def test_stream_order_disabled():
+    assert _rules_hit(STREAM_BAD, rules=_other_rules("stream-order")) == []
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+HOST_SYNC_BAD = """
+    import jax
+
+    def _decode_micro_step_impl(state, x):
+        n = state["pos"].item()
+        return state
+
+    step = jax.jit(_decode_micro_step_impl, donate_argnums=(0,))
+"""
+
+HOST_SYNC_GOOD = """
+    import jax
+
+    def _decode_micro_step_impl(state, x):
+        n = state["pos"] + 1
+        return state
+
+    step = jax.jit(_decode_micro_step_impl, donate_argnums=(0,))
+
+    def host_driver(state):
+        return state["pos"].item()
+"""
+
+
+def test_host_sync_positive():
+    assert _rules_hit(HOST_SYNC_BAD) == ["host-sync"]
+
+
+def test_host_sync_negative():
+    # .item() outside the jit region is the host driver's business
+    assert _rules_hit(HOST_SYNC_GOOD) == []
+
+
+def test_host_sync_disabled():
+    assert _rules_hit(HOST_SYNC_BAD, rules=_other_rules("host-sync")) == []
+
+
+# ---------------------------------------------------------------------------
+# pragmas, selection, syntax errors
+# ---------------------------------------------------------------------------
+
+def test_pragma_suppresses_named_rule():
+    src = SCATTER_BAD.replace(".set(tok)", '.set(tok)  # lint: ok[scatter-drop]')
+    assert _rules_hit(src) == []
+
+
+def test_pragma_on_preceding_line():
+    src = """
+    def _admit(state, slot, tok):
+        # lint: ok
+        return state["tok"].at[slot].set(tok)
+"""
+    assert _rules_hit(src) == []
+
+
+def test_pragma_wrong_rule_does_not_suppress():
+    src = SCATTER_BAD.replace(".set(tok)", '.set(tok)  # lint: ok[host-sync]')
+    assert _rules_hit(src) == ["scatter-drop"]
+
+
+def test_unknown_rule_selection_rejected():
+    with pytest.raises(ValueError):
+        lint_source("x = 1", rules=["no-such-rule"])
+
+
+def test_syntax_error_is_a_finding():
+    hits = lint_source("def broken(:\n    pass")
+    assert [f.rule for f in hits] == ["syntax"]
+
+
+def test_rule_registry_complete():
+    assert set(RULES_BY_NAME) == {"scatter-drop", "donated-use",
+                                  "request-leak", "stream-order",
+                                  "host-sync"}
+
+
+# ---------------------------------------------------------------------------
+# the gate: the repo's own tree lints clean
+# ---------------------------------------------------------------------------
+
+def test_repo_src_tree_is_clean():
+    findings = lint_paths([REPO_SRC])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_cli_clean_exit(capsys):
+    assert main([REPO_SRC]) == 0
+    assert "clean:" in capsys.readouterr().out
+
+
+def test_cli_violation_exit(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(SCATTER_BAD))
+    assert main([str(tmp_path)]) == 1
+    assert "scatter-drop" in capsys.readouterr().out

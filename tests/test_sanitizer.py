@@ -1,0 +1,333 @@
+"""Runtime threadcomm sanitizer (DESIGN.md §11): seeded-violation unit
+tests for every detector, the matching clean-path negatives, and the
+permanent (sanitizer-independent) leak checks on the pools.
+
+Each detector is demonstrated the way CI would hit it: a deliberately
+wrong program is run with the sanitizer installed and must produce
+exactly the expected finding; the corrected program must stay silent.
+The ``uninstalled`` tests prove the hooks are inert when the sanitizer
+is off — instrumented code pays one ``None`` check and nothing else.
+"""
+
+import warnings
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import sanitizer as S
+from repro.core.comm import Request, threadcomm_init
+from repro.core.compat import make_mesh
+from repro.serve.block_pool import BlockPool
+from repro.serve.kv_cache import (LeaseLeakError, LeaseLeakWarning,
+                                  SlotError)
+
+
+@pytest.fixture
+def san():
+    s = S.install()
+    yield s
+    S.uninstall()
+
+
+@pytest.fixture(scope="module")
+def tc():
+    mesh = make_mesh((1,), ("ranks",))
+    comm = threadcomm_init(mesh, process_axes=(), thread_axes=("ranks",))
+    yield comm
+    if comm._active:
+        comm.finish()
+    comm.free()
+
+
+def _window(tc):
+    if not tc._active:
+        tc.start()
+
+
+# ---------------------------------------------------------------------------
+# unmatched requests
+# ---------------------------------------------------------------------------
+
+def test_unmatched_request_at_finish(san, tc):
+    _window(tc)
+    Request(tc, "isend", jnp.zeros((2,)))
+    tc.finish()
+    hits = san.findings_of("unmatched-request")
+    assert len(hits) == 1
+    assert "isend" in hits[0].message
+    assert "finish()" in hits[0].message
+    assert "test_sanitizer" in hits[0].site   # caller, not comm.py
+
+
+def test_waited_request_is_matched(san, tc):
+    _window(tc)
+    Request(tc, "isend", jnp.zeros((2,))).wait()
+    tc.finish()
+    assert san.findings == []
+
+
+def test_tested_request_is_matched(san, tc):
+    _window(tc)
+    r = Request(tc, "isend", jnp.zeros((2,)))
+    done, _ = r.test()
+    assert done
+    tc.finish()
+    assert san.findings == []
+
+
+def test_strict_raises_at_finish(tc):
+    S.install(strict=True)
+    try:
+        _window(tc)
+        Request(tc, "isend", jnp.zeros((2,)))
+        with pytest.raises(S.SanitizerError, match="unmatched-request"):
+            tc.finish()
+    finally:
+        S.uninstall()
+        # strict raised before finish() could flip the window; close it
+        if tc._active:
+            tc.finish()
+
+
+def test_assert_clean_reports_pending(san, tc):
+    _window(tc)
+    r = Request(tc, "isend", jnp.zeros((2,)))
+    with pytest.raises(S.SanitizerError, match="never completed"):
+        san.assert_clean()
+    r.wait()
+    tc.finish()
+    san.assert_clean()
+
+
+# ---------------------------------------------------------------------------
+# accidental-serialization hazards (paper §2)
+# ---------------------------------------------------------------------------
+
+def test_cross_stream_hazard_same_comm(san, tc):
+    _window(tc)
+    sub = tc.dup()
+
+    def body(x):
+        with tc.stream("hz-a"):
+            r1 = sub.iallreduce(x)
+        with tc.stream("hz-b"):
+            r2 = sub.iallreduce(x)
+        r1.wait()
+        r2.wait()
+        return x
+
+    tc.run(body, jnp.zeros((1,)))
+    hits = san.findings_of("serialization-hazard")
+    assert len(hits) == 1
+    assert "dup()" in hits[0].message
+    tc.finish()
+
+
+def test_no_hazard_on_dup_comms(san, tc):
+    _window(tc)
+    sa, sb = tc.dup(), tc.dup()
+
+    def body(x):
+        with tc.stream("dp-a"):
+            r1 = sa.iallreduce(x)
+        with tc.stream("dp-b"):
+            r2 = sb.iallreduce(x)
+        r1.wait()
+        r2.wait()
+        return x
+
+    tc.run(body, jnp.zeros((1,)))
+    assert san.findings_of("serialization-hazard") == []
+    tc.finish()
+
+
+def test_no_hazard_when_wait_orders_streams(san, tc):
+    _window(tc)
+    sub = tc.dup()
+
+    def body(x):
+        with tc.stream("or-a"):
+            r1 = sub.iallreduce(x)
+        r1.wait()          # HB edge: completion flows into what follows
+        with tc.stream("or-b"):
+            r2 = sub.iallreduce(x)
+        r2.wait()
+        return x
+
+    tc.run(body, jnp.zeros((1,)))
+    assert san.findings_of("serialization-hazard") == []
+    tc.finish()
+
+
+def test_no_hazard_within_one_stream(san, tc):
+    _window(tc)
+    sub = tc.dup()
+
+    def body(x):
+        with tc.stream("sq"):
+            r1 = sub.iallreduce(x)
+            r2 = sub.iallreduce(x)
+        r1.wait()
+        r2.wait()
+        return x
+
+    tc.run(body, jnp.zeros((1,)))
+    assert san.findings_of("serialization-hazard") == []
+    tc.finish()
+
+
+# ---------------------------------------------------------------------------
+# lease ledger: double free with provenance, leaks at reset
+# ---------------------------------------------------------------------------
+
+def test_double_free_provenance(san):
+    pool = BlockPool(8, 4)
+    blocks = pool.alloc(2, "req-7")
+    pool.free(blocks)
+    with pytest.raises(SlotError) as ei:
+        pool.free(blocks)
+    # the permanent error now carries the ledger's provenance
+    assert "allocated at" in str(ei.value)
+    assert "first freed at" in str(ei.value)
+    assert "test_sanitizer" in str(ei.value)
+    hits = san.findings_of("double-free")
+    assert len(hits) == 1
+    assert "req-7" in hits[0].message
+
+
+def test_lease_leak_at_reset(san):
+    pool = BlockPool(8, 4)
+    pool.alloc(3, "leaker")
+    with pytest.warns(LeaseLeakWarning, match="leaker"):
+        pool.reset()
+    hits = san.findings_of("lease-leak")
+    assert len(hits) == 3
+    assert all("allocated at" in h.message for h in hits)
+
+
+def test_clean_reset_no_findings(san):
+    pool = BlockPool(8, 4)
+    pool.free(pool.alloc(3, "tidy"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        pool.reset()
+    assert san.findings == []
+
+
+# ---------------------------------------------------------------------------
+# permanent pool checks (sanitizer NOT installed)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def no_san():
+    """Force the uninstalled state (REPRO_SANITIZE=1 in the environment
+    auto-installs at import; these tests prove the permanent checks
+    stand on their own)."""
+    S.uninstall()
+    yield
+    S.uninstall()
+
+
+def test_reset_warns_without_sanitizer(no_san):
+    assert S.active() is None
+    pool = BlockPool(8, 4)
+    pool.alloc(1, "bare")
+    with pytest.warns(LeaseLeakWarning, match="bare"):
+        pool.reset()
+
+
+def test_reset_strict_raises_without_sanitizer(no_san):
+    assert S.active() is None
+    pool = BlockPool(8, 4)
+    pool.alloc(1, "bare")
+    with pytest.raises(LeaseLeakError, match="bare"):
+        pool.reset(strict=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", LeaseLeakWarning)
+        pool.reset()
+
+
+def test_double_free_message_without_sanitizer(no_san):
+    assert S.active() is None
+    pool = BlockPool(8, 4)
+    blocks = pool.alloc(1, "bare")
+    pool.free(blocks)
+    with pytest.raises(SlotError, match="last owner 'bare'"):
+        pool.free(blocks)
+
+
+# ---------------------------------------------------------------------------
+# migration completeness
+# ---------------------------------------------------------------------------
+
+class _StubModel:
+    @staticmethod
+    def init_paged_cache(num_blocks, block_size):
+        shape = (2, num_blocks, block_size, 1, 2)
+        return {"k": jnp.zeros(shape, jnp.float32),
+                "v": jnp.zeros(shape, jnp.float32)}
+
+
+def _paged_pair():
+    from repro.serve.block_pool import PagedKVCache
+    mk = lambda: PagedKVCache(_StubModel, num_blocks=6, block_size=4,
+                              num_slots=2, max_blocks_per_req=4)
+    return mk(), mk()
+
+
+def test_complete_migration_is_clean(san, tc):
+    from repro.serve.fabric.transport import KVBlockTransport
+    _window(tc)
+    src, dst = _paged_pair()
+    tp = KVBlockTransport(tc)
+    tp.migrate(src, dst, [0, 1], [2, 3])
+    tc.finish()
+    assert san.findings == []
+    san.assert_clean()
+
+
+def test_interrupted_migration_reported(san, tc):
+    from repro.serve.fabric.transport import KVBlockTransport
+    _window(tc)
+    src, dst = _paged_pair()
+    tp = KVBlockTransport(tc)
+    real_copy, calls = tp._copy, [0]
+
+    def bomb(*a):
+        calls[0] += 1
+        if calls[0] == 2:
+            raise RuntimeError("simulated device loss")
+        return real_copy(*a)
+
+    tp._copy = bomb
+    with pytest.raises(RuntimeError, match="device loss"):
+        tp.migrate(src, dst, [0, 1, 4], [2, 3, 5])
+    tc.finish()
+    # the finally-block waitall completed the issued prefix, so no
+    # request leaks — but the migration itself never reached its
+    # completion point and must be reported
+    assert san.findings_of("unmatched-request") == []
+    hits = san.findings_of("migration-incomplete")
+    assert len(hits) == 1
+    assert "3 blocks" in hits[0].message
+
+
+# ---------------------------------------------------------------------------
+# hooks are inert when uninstalled
+# ---------------------------------------------------------------------------
+
+def test_uninstalled_comm_hooks_inert(no_san, tc):
+    assert S.active() is None
+    _window(tc)
+    Request(tc, "isend", jnp.zeros((2,)))   # leaked on purpose
+    tc.finish()                             # must not raise or record
+
+
+def test_install_is_fresh_each_time(san, tc):
+    _window(tc)
+    Request(tc, "isend", jnp.zeros((2,)))
+    tc.finish()
+    assert len(san.findings) == 1
+    fresh = S.install()
+    assert fresh.findings == []
+    S.uninstall()

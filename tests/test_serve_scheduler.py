@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 
 from repro.core import p2p, protocol
-from repro.serve import (CellQueueScheduler, ServeRequest, SlotError,
-                         SlotKVCache, make_trace, shard_trace)
+from repro.serve import (CellQueueScheduler, LeaseLeakWarning, ServeRequest,
+                         SlotError, SlotKVCache, make_trace, shard_trace)
 
 
 def _req(rid, prompt_len, max_new=8, arrival=0.0):
@@ -247,7 +247,9 @@ def test_slot_rows_insert_at_and_reset_slot():
     assert kv.length(a) == 0
     with pytest.raises(SlotError):
         kv.reset_slot((a + 1) % 3)                  # free slot
-    kv.reset()
+    # slot a is still leased: the reset must name the leak
+    with pytest.warns(LeaseLeakWarning, match="req-a"):
+        kv.reset()
     assert kv.num_free == 3 and kv.live_slots == []
 
 

@@ -82,6 +82,18 @@ def rows(fast: bool = False) -> Iterator[Row]:
                f"equal HBM; verified_more_concurrent="
                f"{res['paged_more_concurrent_verified']} hbm_within_budget="
                f"{res['paged_hbm_within_budget']}")
+    if "prefix_hit_rate" in res:
+        pfx = res["prefix"]
+        yield ("serve_prefix_hit_rate", res["prefix_hit_rate"],
+               f"warm token hit rate on shared_prefix_len="
+               f"{pfx['shared_prefix_len']} trace ({pfx['prefix_groups']} "
+               f"groups, share_ratio={pfx['share_ratio']}); "
+               f"token_identical={res['prefix_token_identical']}")
+        yield ("serve_prefix_tokens_saved", res["prefill_tokens_saved"],
+               f"prefill tokens skipped warm (dispatches_saved="
+               f"{res['prefill_dispatches_saved']:.0f} cow_clones="
+               f"{pfx['warm']['prefix_cow_clones']:.0f}); "
+               f"ttft_p95_improved={res['prefix_ttft_p95_improved']}")
     yield ("serve_parity_greedy", 0.0,
            f"token_identical={res['parity_token_identical']} "
            f"(chunked ContinuousEngine vs StaticEngine, same-arrival "

@@ -239,8 +239,12 @@ class ThreadSanitizer:
         for r in resources:
             self.ledger.on_alloc(id(pool), int(r), owner, site)
 
-    def on_lease_ref(self, pool, resource) -> None:
-        self.ledger.on_ref(id(pool), int(resource))
+    def on_lease_ref(self, pool, resource, owner=None) -> None:
+        """A shared reference (prefix lease / CoW source) was added —
+        the ledger keeps who and where, so a later double free on the
+        shared block reports the whole chain."""
+        self.ledger.on_ref(id(pool), int(resource), owner=owner,
+                           site=_call_site())
 
     def on_lease_release(self, pool, resource) -> None:
         self.ledger.on_release(id(pool), int(resource), _call_site())
@@ -264,7 +268,8 @@ class ThreadSanitizer:
             self._emit(
                 "lease-leak",
                 f"block {res} (owner {rec.owner!r}) still leased at "
-                f"reset(); allocated at {rec.alloc_site}",
+                f"reset(); allocated at {rec.alloc_site}"
+                + self.ledger._shared_history(rec),
                 _call_site())
         self.ledger.forget_pool(id(pool))
 

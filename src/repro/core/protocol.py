@@ -117,6 +117,32 @@ def paged_admission_latency(nbytes: int, chunk_bytes: int, block_bytes: int,
             + nblocks * m.t_envelope * 0.25)
 
 
+def prefix_hit_latency(nbytes: int, block_bytes: int,
+                       m: HostModel = HostModel(),
+                       cow_blocks: int = 0) -> float:
+    """Admission price of the cache-hit fraction of a prompt (prefix
+    caching, DESIGN.md §12).
+
+    A radix-cache hit is the paper's shared-address-space argument
+    applied to prefill: the KV for these tokens is already resident in
+    the block pool, so admitting them is a *lease handoff*, not a
+    recompute-and-copy. One rendezvous handshake claims the cached path,
+    then each hit block pays the same quarter-envelope table-entry
+    surcharge that :func:`paged_admission_latency` charges — and nothing
+    else: the payload never crosses, which is the whole win over the
+    chunked deposit. Each copy-on-write clone (a shared block the
+    request must diverge from) adds one block-sized interthread copy,
+    the only payload motion on the hit path.
+    """
+    if block_bytes < 1:
+        raise ValueError("block_bytes must be >= 1")
+    nblocks = max(0, -(-max(0, nbytes) // block_bytes))
+    cost = m.t_handshake + nblocks * m.t_envelope * 0.25
+    if cow_blocks > 0:
+        cost += cow_blocks * interthread_latency(block_bytes, m)
+    return cost
+
+
 def kv_migration_latency(nbytes: int, block_bytes: int,
                          m: HostModel = HostModel()) -> float:
     """Price of migrating a finished prefill's KV to another rank

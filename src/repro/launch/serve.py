@@ -43,6 +43,7 @@ import time
 from typing import Dict, List
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ServeConfig, TrainConfig
@@ -65,13 +66,35 @@ def useful_tokens(row: np.ndarray, eos_id: int) -> int:
 def requests_from_trace(cfg, trace, *, dtype: str = "float32",
                         seed: int = 0) -> List[ServeRequest]:
     """Materialize one ServeRequest per trace entry with a distinct
-    synthetic prompt (seeded per request id)."""
+    synthetic prompt (seeded per request id).
+
+    Entries carrying a ``prefix_group`` (shared-prefix traces — system
+    prompt / few-shot template workloads) open with their group's
+    template tokens: one synthetic template per group, sliced to each
+    entry's ``prefix_len``; the suffix stays the entry's own random
+    tokens. Deterministic in ``seed``, so two engines driven from the
+    same trace see byte-identical prompts."""
+    templates: Dict[int, np.ndarray] = {}
+    longest: Dict[int, int] = {}
+    for e in trace:
+        g = getattr(e, "prefix_group", -1)
+        if g >= 0 and e.prefix_len > 0:
+            longest[g] = max(longest.get(g, 0), e.prefix_len)
+    for g, plen in longest.items():
+        tb = make_synthetic_batch(cfg, 1, plen, seed=seed + 131 + g,
+                                  compute_dtype=dtype)
+        templates[g] = np.asarray(tb["tokens"])
     reqs = []
     for rid, entry in enumerate(trace):
         batch = make_synthetic_batch(cfg, 1, entry.prompt_len,
                                      seed=seed + 1000 + rid,
                                      compute_dtype=dtype)
         prompt = {k: np.asarray(v) for k, v in batch.items() if k != "labels"}
+        g = getattr(entry, "prefix_group", -1)
+        if g >= 0 and entry.prefix_len > 0 and "tokens" in prompt:
+            toks = prompt["tokens"].copy()
+            toks[:, :entry.prefix_len] = templates[g][:, :entry.prefix_len]
+            prompt["tokens"] = toks
         reqs.append(ServeRequest(rid=rid, batch=prompt,
                                  max_new_tokens=entry.max_new,
                                  temperature=entry.temperature,
@@ -308,7 +331,9 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
                 seed: int = 0, parity_check: bool = True,
                 prefill_chunk: int = 64, max_prefill_per_step: int = 2,
                 chunk_compare: bool = True, paged_compare: bool = True,
-                block_size: int = 16) -> Dict:
+                block_size: int = 16, prefix_compare: bool = True,
+                shared_prefix_len: int = 0,
+                share_ratio: float = 0.9) -> Dict:
     """Build the model once, warm the jits, then drive the trace through
     the requested engine(s). Returns the full measurement dict.
 
@@ -329,6 +354,16 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
     resource): the result records token-identity against the slot run,
     resident KV bytes/token, and peak concurrent requests at equal HBM —
     the paged engine must sustain strictly more.
+
+    With ``prefix_compare`` (and a paged+chunkable arch) the driver also
+    runs a shared-prefix trace (``shared_prefix_len`` template tokens,
+    default ~3/4 of the longest prompt; ``share_ratio`` of requests in
+    one of two template families) through three configurations: a paged
+    engine without the radix prefix cache, a prefix-cached engine cold,
+    and the same engine warm (``reset(preserve_prefix=True)`` — the
+    repeat-tenant shape). All three must be token-identical; the warm
+    pass's hit rate, prefill work saved, and TTFT improvement land as
+    top-level keys (DESIGN.md §12).
     """
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     dtype = "float32" if smoke else "bfloat16"
@@ -431,6 +466,84 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
             result["slot_bytes_per_resident_token"] = \
                 c["kv_bytes_per_resident_token"]
 
+        if (eff_chunk and prefix_compare
+                and model.decode_step_paged is not None
+                and model.clone_paged_block is not None):
+            bs = block_size
+            spl = (int(shared_prefix_len) if shared_prefix_len > 0
+                   else (3 * pmax // 4) // bs * bs)
+            spl = max(bs, min(spl, pmax - 1))
+            groups = 2
+            trace_pfx = make_trace(
+                requests, prompt_len=pmax, max_new=max_new,
+                arrival=arrival, rate=rate, burst=burst,
+                temperature=temperature, shared_prefix_len=spl,
+                share_ratio=share_ratio, prefix_groups=groups, seed=seed)
+            # pool sized for live requests PLUS the parked prefix index:
+            # the shared templates, every request's private tail chain,
+            # and headroom — the bench measures hit behavior, not
+            # eviction churn (tests/test_prefix_cache.py covers that)
+            nblocks_pfx = (slots * -(-cache_len // bs)
+                           + groups * -(-spl // bs)
+                           + requests * (-(-(pmax - spl) // bs) + 2))
+
+            def _mk_pfx(prefix_cache: bool) -> ContinuousEngine:
+                e = ContinuousEngine(
+                    model, params, cache_len=cache_len, num_slots=slots,
+                    eos_id=eos_id, prefill_chunk=prefill_chunk,
+                    max_prefill_per_step=max_prefill_per_step,
+                    kv_layout="paged", block_size=bs,
+                    num_blocks=nblocks_pfx, prefix_cache=prefix_cache)
+                e.generate({k: np.concatenate([v] * min(2, e.kv.num_slots))
+                            for k, v in warm.items()}, 2)
+                if prefix_cache:
+                    # compile the CoW clone off the clock too (a self-
+                    # clone is a no-op on the pool contents) — the first
+                    # partial-block hit otherwise pays it mid-traffic
+                    e.kv.swap_buffers(e._cow_clone(
+                        e.kv.buffers, jnp.int32(0), jnp.int32(0)))
+                e.reset()          # full reset: warm-up prompts must not
+                return e           # pre-seed the trie
+
+            base_reqs = requests_from_trace(cfg, trace_pfx, dtype=dtype,
+                                            seed=seed)
+            base_stats = drive_continuous(_mk_pfx(False), base_reqs)
+
+            peng = _mk_pfx(True)
+            cold_reqs = requests_from_trace(cfg, trace_pfx, dtype=dtype,
+                                            seed=seed)
+            cold_stats = drive_continuous(peng, cold_reqs)
+            cold_stats.update(peng.prefix_stats())
+            # warm: rows drain, the trie (and device KV) survives — the
+            # repeat-tenant pass every hit block is already resident for
+            peng.reset(preserve_prefix=True)
+            warm_reqs = requests_from_trace(cfg, trace_pfx, dtype=dtype,
+                                            seed=seed)
+            warm_stats = drive_continuous(peng, warm_reqs)
+            warm_stats.update(peng.prefix_stats())
+
+            ident = bool(all(
+                np.array_equal(a.output[:a.generated],
+                               b.output[:b.generated])
+                and np.array_equal(a.output[:a.generated],
+                                   w.output[:w.generated])
+                for a, b, w in zip(base_reqs, cold_reqs, warm_reqs)))
+            result["prefix"] = {
+                "shared_prefix_len": spl, "share_ratio": share_ratio,
+                "prefix_groups": groups, "num_blocks": nblocks_pfx,
+                "prompt_len": pmax, "baseline": base_stats,
+                "cold": cold_stats, "warm": warm_stats,
+            }
+            result["prefix_token_identical"] = ident
+            result["prefix_hit_rate"] = warm_stats["prefix_hit_rate"]
+            result["prefill_tokens_saved"] = \
+                warm_stats["prefill_tokens_saved"]
+            result["prefill_dispatches_saved"] = \
+                warm_stats["prefill_dispatches_saved"]
+            if ("ttft_p95_s" in warm_stats and "ttft_p95_s" in cold_stats):
+                result["prefix_ttft_p95_improved"] = bool(
+                    warm_stats["ttft_p95_s"] < cold_stats["ttft_p95_s"])
+
     if engine in ("static", "both"):
         seng = StaticEngine(model, params, cache_len=cache_len, eos_id=eos_id)
         seng.generate({k: np.concatenate([v] * slots)
@@ -500,6 +613,14 @@ def main():
                     help="tokens per KV block for the paged comparison run")
     ap.add_argument("--no-paged-compare", action="store_true",
                     help="skip the paged-KV comparison run")
+    ap.add_argument("--no-prefix-compare", action="store_true",
+                    help="skip the radix prefix-cache comparison run")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="template tokens shared by the prefix-compare "
+                         "trace (0 = ~3/4 of the longest prompt)")
+    ap.add_argument("--share-ratio", type=float, default=0.9,
+                    help="fraction of prefix-compare requests drawn from "
+                         "a shared template family")
     ap.add_argument("--fabric", default="off",
                     choices=["off", "replicated", "disagg", "both"],
                     help="run the multi-rank serving fabric comparison "
@@ -585,7 +706,10 @@ def main():
         max_prefill_per_step=args.max_prefill_per_step,
         chunk_compare=not args.no_chunk_compare,
         paged_compare=not args.no_paged_compare,
-        block_size=args.kv_block_size)
+        block_size=args.kv_block_size,
+        prefix_compare=not args.no_prefix_compare,
+        shared_prefix_len=args.shared_prefix_len,
+        share_ratio=args.share_ratio)
 
     print(f"arch={result['arch']} requests={result['requests']} "
           f"slots={result['slots']} cache_len={result['cache_len']} "
@@ -622,13 +746,26 @@ def main():
               f"bytes/resident-tok {result['paged_bytes_per_resident_token']:.0f}"
               f" vs {result['slot_bytes_per_resident_token']:.0f}, "
               f"token_identical={result['paged_token_identical_trace']})")
+    if "prefix" in result:
+        pfx = result["prefix"]
+        warm_ttft = pfx["warm"].get("ttft_p95_s", 0.0)
+        cold_ttft = pfx["cold"].get("ttft_p95_s", 0.0)
+        print(f"     prefix: hit_rate {result['prefix_hit_rate']:.3f}  "
+              f"tokens_saved {result['prefill_tokens_saved']:.0f}  "
+              f"dispatches_saved {result['prefill_dispatches_saved']:.0f}  "
+              f"cow {pfx['warm'].get('prefix_cow_clones', 0.0):.0f}  "
+              f"ttft_p95 warm {warm_ttft * 1e3:.0f}ms vs cold "
+              f"{cold_ttft * 1e3:.0f}ms "
+              f"(improved={result.get('prefix_ttft_p95_improved')}, "
+              f"token_identical={result['prefix_token_identical']}, "
+              f"shared_len={pfx['shared_prefix_len']})")
     if "parity_token_identical" in result:
         print(f"     parity: token_identical="
               f"{result['parity_token_identical']} "
               f"paged={result.get('parity_token_identical_paged')} "
               f"(prompt_len={result.get('parity_prompt_len')})")
     if args.json:
-        payload = {"schema": "repro-serve-bench-v3", **result}
+        payload = {"schema": "repro-serve-bench-v5", **result}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"wrote {args.json}")

@@ -38,6 +38,8 @@ class Model(NamedTuple):
     init_paged_cache: Any = None
     decode_step_paged: Any = None
     prefill_chunk_paged: Any = None
+    # copy-on-write block clone for the radix prefix cache (paged only)
+    clone_paged_block: Any = None
 
 
 def _knobs(train: TrainConfig, serve: ServeConfig,
@@ -105,7 +107,9 @@ def build_model(cfg: ModelConfig, train: TrainConfig = None,
                            if chunkable else None),
         prefill_chunk_paged=(
             transformer.make_prefill_chunk_paged(cfg, knobs, tp)
-            if chunkable else None))
+            if chunkable else None),
+        clone_paged_block=(transformer.make_clone_block(cfg, knobs, tp)
+                           if chunkable else None))
 
 
 # ---------------------------------------------------------------------------

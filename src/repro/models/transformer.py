@@ -630,6 +630,33 @@ def make_prefill_chunk_paged(cfg: ModelConfig, knobs, tp: int):
     return prefill_chunk
 
 
+def make_clone_block(cfg: ModelConfig, knobs, tp: int):
+    """Device-side copy-on-write clone of one pool block (prefix caching,
+    DESIGN.md §12): duplicate block ``src``'s pages — every layer, k and
+    v — into block ``dst``, leaving the rest of the pool untouched.
+
+    The prefix cache leases a *partially* matching cached block to the
+    admitting request; the request's chunked prefill then resumes at a
+    nonzero offset inside the cloned block and overwrites only the
+    divergent tail positions (``prefill_chunk_paged`` already takes
+    per-row ``pos0``, so resuming mid-block needs no model change — the
+    clone is the one new device op the CoW path requires). The shared
+    source block is never written.
+    """
+    del cfg, knobs, tp      # the pool layout is shape-polymorphic here
+
+    def clone_block(cache, src, dst):
+        """cache k/v (L, P, bs, Gs, hd); src/dst scalar int32 -> cache."""
+        # block-indexed scatter: like every pool write, an out-of-range
+        # destination drops instead of clamping onto a live block
+        return {"k": cache["k"].at[:, dst].set(cache["k"][:, src],
+                                               mode="drop"),
+                "v": cache["v"].at[:, dst].set(cache["v"][:, src],
+                                               mode="drop")}
+
+    return clone_block
+
+
 def _chunk_attn(cfg, p, xn, layer_cache, qpos, valid, is_global):
     """Attention for a prompt chunk against (and into) the cache:
     :func:`_cached_attn` with invalid (padding) positions aimed at the

@@ -6,6 +6,7 @@ from repro.serve.fabric import (DisaggregatedPlacement, EngineWorker,  # noqa: F
                                 ServingFabric)
 from repro.serve.kv_cache import (LeaseLeakError, LeaseLeakWarning,  # noqa: F401
                                   SlotError, SlotKVCache)
+from repro.serve.prefix_cache import PrefixCache, PrefixHit  # noqa: F401
 from repro.serve.scheduler import (CellQueueScheduler, ServeRequest,  # noqa: F401
                                    TraceEntry, latency_stats_over,
                                    make_trace, shard_trace)

@@ -59,10 +59,24 @@ class BlockPool:
         self._ref = np.zeros((num_blocks,), np.int32)
         self._owner: List[Optional[object]] = [None] * num_blocks
         self._last_owner: List[Optional[object]] = [None] * num_blocks
+        self._reclaimer = None        # e.g. a PrefixCache (DESIGN.md §12)
+
+    def attach_reclaimer(self, reclaimer) -> None:
+        """Register a deferred reclaimer (the prefix cache): blocks it
+        parks count as free for admission (``num_free``), ``alloc``
+        asks it to ``reclaim`` when the free list runs short, and
+        ``free`` notifies it when a block's sole surviving reference
+        could be its own (``on_sole_ref``)."""
+        if self._reclaimer is not None and self._reclaimer is not reclaimer:
+            raise SlotError("pool already has a reclaimer attached")
+        self._reclaimer = reclaimer
 
     @property
     def num_free(self) -> int:
-        return len(self._free)
+        free = len(self._free)
+        if self._reclaimer is not None:
+            free += self._reclaimer.evictable()
+        return free
 
     @property
     def num_live(self) -> int:
@@ -85,6 +99,10 @@ class BlockPool:
         exhaustion — admission control must gate on ``num_free``."""
         if owner is None:
             raise SlotError("block owner must be non-None")
+        if n > len(self._free) and self._reclaimer is not None:
+            # deferred reclamation: evict parked prefix-cache blocks
+            # (LRU order) until the free list covers the request
+            self._reclaimer.reclaim(n - len(self._free))
         if n > len(self._free):
             raise SlotError(
                 f"block pool exhausted: need {n}, have {len(self._free)} "
@@ -99,14 +117,15 @@ class BlockPool:
             san.on_lease_alloc(self, blocks, owner)
         return blocks
 
-    def ref(self, block: int) -> None:
-        """Add a reference to a live block (shared-prefix lease)."""
+    def ref(self, block: int, owner: object = None) -> None:
+        """Add a reference to a live block (shared-prefix lease);
+        ``owner`` feeds the ledger's shared-ref provenance."""
         if self._ref[block] < 1:
             raise SlotError(f"ref of free block {block}")
         self._ref[block] += 1
         san = _san_active()
         if san is not None:
-            san.on_lease_ref(self, block)
+            san.on_lease_ref(self, block, owner)
 
     def free(self, blocks) -> None:
         """Drop one reference per block; blocks reaching zero return to
@@ -127,6 +146,10 @@ class BlockPool:
             if self._ref[b] == 0:
                 self._owner[b] = None
                 self._free.append(b)
+            elif self._ref[b] == 1 and self._reclaimer is not None:
+                # the survivor may be the reclaimer's own reference —
+                # it parks the block (LRU) if so, ignores otherwise
+                self._reclaimer.on_sole_ref(b)
             if san is not None:
                 san.on_lease_release(self, b)
 
@@ -153,6 +176,10 @@ class BlockPool:
         self._free = list(range(self.num_blocks - 1, -1, -1))
         self._ref[:] = 0
         self._owner = [None] * self.num_blocks
+        if self._reclaimer is not None:
+            # every lease (the reclaimer's included) was just wiped; the
+            # reclaimer drops its index without re-freeing anything
+            self._reclaimer.on_pool_reset()
 
 
 class PagedKVCache:
@@ -226,14 +253,25 @@ class PagedKVCache:
             raise SlotError(f"blocks_of free row {slot}")
         return self._tables[slot, :int(self._nblocks[slot])].tolist()
 
-    def can_admit(self, ntokens: int) -> bool:
-        """One free row + enough free blocks for ``ntokens`` tokens."""
+    def can_admit(self, ntokens: int, hit=None) -> bool:
+        """One free row + enough free blocks for ``ntokens`` tokens.
+
+        With a :class:`~repro.serve.prefix_cache.PrefixHit`, only the
+        *miss* tail needs fresh blocks — but the hit's parked blocks,
+        while costing nothing from the free list, stop being evictable
+        the moment they are leased, so they are subtracted from the
+        pool's (free + evictable) headroom."""
         nb = self.blocks_for(ntokens)
         if nb > self.max_blocks_per_req:
             raise SlotError(
                 f"request of {ntokens} tokens needs {nb} blocks > "
                 f"max_blocks_per_req={self.max_blocks_per_req}")
-        return bool(self._free_rows) and nb <= self.pool.num_free
+        if not self._free_rows:
+            return False
+        if hit is None:
+            return nb <= self.pool.num_free
+        fresh = nb - len(hit.blocks)
+        return fresh <= self.pool.num_free - hit.n_parked
 
     # -- lease lifecycle ---------------------------------------------------
     def alloc(self, owner: object, ntokens: int) -> int:
@@ -255,6 +293,44 @@ class PagedKVCache:
         self._last_owner[slot] = owner
         self._tables[slot, :] = -1
         self._tables[slot, :nb] = np.asarray(blocks, np.int32)
+        self._tables_dev = None
+        self._nblocks[slot] = nb
+        self._len[slot] = 0
+        return slot
+
+    def alloc_prefix(self, owner: object, ntokens: int, hit,
+                     cache) -> int:
+        """Claim a row backed partly by cached prefix blocks: the hit's
+        blocks are leased at refcount+1 through ``cache.lease`` (CoW
+        source included, as a temporary reference) and only the miss
+        tail is freshly allocated. Lease-before-alloc ordering matters:
+        a reclaim triggered by the fresh allocation can never evict a
+        block this request just hit."""
+        if owner is None:
+            raise SlotError("row owner must be non-None")
+        if not self._free_rows:
+            raise SlotError("request rows exhausted (admission must gate "
+                            "on num_free)")
+        nb = self.blocks_for(ntokens)
+        if nb > self.max_blocks_per_req:
+            raise SlotError(
+                f"request of {ntokens} tokens needs {nb} blocks > "
+                f"max_blocks_per_req={self.max_blocks_per_req}")
+        shared = list(hit.blocks)
+        cache.lease(hit, owner)
+        try:
+            fresh = self.pool.alloc(nb - len(shared), owner)
+        except SlotError:
+            # unwind the shared leases; admission should have gated
+            if hit.cow_src is not None:
+                self.pool.free([hit.cow_src])
+            self.pool.free(shared)
+            raise
+        slot = self._free_rows.pop()
+        self._owner[slot] = owner
+        self._last_owner[slot] = owner
+        self._tables[slot, :] = -1
+        self._tables[slot, :nb] = np.asarray(shared + fresh, np.int32)
         self._tables_dev = None
         self._nblocks[slot] = nb
         self._len[slot] = 0
@@ -359,3 +435,23 @@ class PagedKVCache:
         self._owner = [None] * self.num_slots
         self._nblocks[:] = 0
         self._len[:] = 0
+
+    def reset_rows(self, *, strict: bool = False) -> None:
+        """Free every request *row* (and its block lease) while leaving
+        the rest of the pool — the prefix cache's parked index and the
+        device buffers — intact. This is the warm-cache reset: a new
+        trace starts with empty rows but a populated cache. Occupied
+        rows are still leaks and are named exactly like :meth:`reset`;
+        they are then freed through the ordinary path, so shared blocks
+        fall back to the cache (parked) rather than vanishing."""
+        leaked = [(s, self._owner[s]) for s in range(self.num_slots)
+                  if self._owner[s] is not None]
+        if leaked:
+            msg = (f"reset with {len(leaked)} live request row(s): "
+                   + ", ".join(f"row {s} (owner {o!r})" for s, o in leaked))
+            if strict:
+                raise LeaseLeakError(msg)
+            warnings.warn(msg, LeaseLeakWarning, stacklevel=2)
+            for s, _ in leaked:
+                self.free(s)
+        self._tables_dev = None

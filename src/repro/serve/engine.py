@@ -68,6 +68,7 @@ import numpy as np
 
 from repro.serve.block_pool import PagedKVCache
 from repro.serve.kv_cache import SlotKVCache
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import CellQueueScheduler, ServeRequest
 
 
@@ -202,7 +203,7 @@ class ContinuousEngine:
                  comm=None, max_prefill_per_step: int = 1,
                  prefill_chunk: int = 64, kv_layout: str = "slot",
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 role: str = "full"):
+                 role: str = "full", prefix_cache: bool = False):
         if kv_layout not in ("slot", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r} "
                              "(expected 'slot' or 'paged')")
@@ -251,6 +252,27 @@ class ContinuousEngine:
                                    max_blocks_per_req=mbr)
         else:
             self.kv = SlotKVCache(model, cache_len, num_slots)
+        if prefix_cache:
+            # radix-tree prefix cache (DESIGN.md §12): admission walks
+            # the trie, leases every hit block at refcount+1, and starts
+            # chunked prefill at the first miss offset; the cache is the
+            # pool's attached reclaimer (LRU eviction of parked blocks)
+            if kv_layout != "paged":
+                raise ValueError("prefix caching shares paged KV blocks; "
+                                 "it requires kv_layout='paged'")
+            if role != "full":
+                raise ValueError("prefix caching is not supported on "
+                                 "disaggregated prefill/decode ranks "
+                                 "(migrated blocks leave the local pool)")
+            if getattr(model, "clone_paged_block", None) is None:
+                raise ValueError("prefix caching needs the model's "
+                                 "copy-on-write block clone "
+                                 "(clone_paged_block)")
+            self.prefix_cache = PrefixCache(self.kv.pool)
+            self._cow_clone = jax.jit(model.clone_paged_block,
+                                      donate_argnums=(0,))
+        else:
+            self.prefix_cache = None
         self.scheduler = scheduler or CellQueueScheduler(
             num_cells=4 * num_slots,
             prefill_chunk_bytes=4 * self.prefill_chunk,
@@ -321,6 +343,16 @@ class ContinuousEngine:
         self.peak_live = 0
         self._resident_tok_sum = 0
         self._reserved_tok_sum = 0
+
+        # prefix-cache accounting (stays zero when the cache is off):
+        # hit tokens never re-prefill, so saved tokens == hit tokens and
+        # saved dispatches is the per-request chunk-count difference
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_prompt_tokens = 0
+        self.prefill_dispatches_saved = 0
+        self.prefix_cow_clones = 0
 
     @staticmethod
     def _fresh_state(S: int):
@@ -543,10 +575,14 @@ class ContinuousEngine:
             # request is held back (head-of-line) until its whole token
             # budget (prompt + max_new) fits in free blocks. Admit one
             # request at a time so each lease is debited from the free
-            # pool before the next candidate is gated.
+            # pool before the next candidate is gated. With the prefix
+            # cache, only the miss tail needs fresh blocks: the gate
+            # prices the hit so shared-prefix bursts admit earlier.
             can = ((lambda r: self.kv.can_admit(
-                self._token_budget(r))) if self.kv_layout == "paged"
-                else None)
+                self._token_budget(r),
+                hit=(self._prefix_lookup(r) if self.prefix_cache
+                     is not None else None)))
+                if self.kv_layout == "paged" else None)
             while budget > 0:
                 admitted = self.scheduler.admit(now, 1, can_admit=can)
                 if not admitted:
@@ -611,16 +647,41 @@ class ContinuousEngine:
             "peak_concurrent": float(self.peak_live),
         }
 
+    def prefix_stats(self) -> dict:
+        """Prefix-cache evidence for BENCH_serve (empty when the cache
+        is off): hit rate in *tokens* (hit tokens over prompt tokens
+        seen), prefill work saved, CoW/eviction counts, and the modeled
+        hit-path cost (``protocol.prefix_hit_latency``)."""
+        pc = self.prefix_cache
+        if pc is None:
+            return {}
+        return {
+            "prefix_lookups": float(self.prefix_lookups),
+            "prefix_hits": float(self.prefix_hits),
+            "prefix_hit_rate": (self.prefix_hit_tokens
+                                / max(1, self.prefix_prompt_tokens)),
+            "prefill_tokens_saved": float(self.prefix_hit_tokens),
+            "prefill_dispatches_saved": float(self.prefill_dispatches_saved),
+            "prefix_cow_clones": float(self.prefix_cow_clones),
+            "prefix_modeled_hit_cost_us":
+                1e6 * self.scheduler.modeled_prefix_hit_cost_s,
+            **pc.stats(),
+        }
+
     # -- chunked prompt deposit (rendezvous-style streaming) ---------------
     def _begin_prefill(self, req: ServeRequest) -> None:
         """Claim a slot (or lease blocks + a request row) and enter the
         ``prefilling`` state: the prompt will stream in chunk by chunk
         across micro-steps."""
+        resident = 0
         if self.kv_layout == "paged":
             # no blanking needed: paged masking is structural (a stale
             # page of a block's previous owner is never at a position
             # <= qpos of the new owner)
-            slot = self.kv.alloc(req, self._token_budget(req))
+            if self.prefix_cache is not None:
+                slot, resident = self._admit_with_prefix(req)
+            else:
+                slot = self.kv.alloc(req, self._token_budget(req))
         else:
             slot = self.kv.alloc(req)
             self.kv.reset_slot(slot)   # stale pages must not alias history
@@ -628,7 +689,54 @@ class ContinuousEngine:
         tokens = np.asarray(req.batch["tokens"][0], np.int32)
         key = jax.random.fold_in(jax.random.PRNGKey(req.seed), req.rid)
         self._prefilling.append(_PrefillJob(req=req, slot=slot,
-                                            tokens=tokens, key=key))
+                                            tokens=tokens, key=key,
+                                            off=resident))
+
+    def _prefix_lookup(self, req: ServeRequest):
+        """Longest cached prefix of the prompt, clamped one token short
+        of the full length: the final chunk always re-prefills, so its
+        last-position logits exist to seed decode."""
+        tokens = np.asarray(req.batch["tokens"][0], np.int32)
+        return self.prefix_cache.lookup(tokens, limit=len(tokens) - 1)
+
+    def _admit_with_prefix(self, req: ServeRequest):
+        """Paged admission through the radix cache: lease every hit
+        block at refcount+1, allocate fresh blocks for the miss tail
+        only, clone the divergent block for a partial (CoW) hit, and
+        start chunked prefill at the first miss offset. Returns
+        ``(slot, resident)`` — resident tokens never re-prefill."""
+        hit = self._prefix_lookup(req)
+        slot = self.kv.alloc_prefix(req, self._token_budget(req), hit,
+                                    self.prefix_cache)
+        resident = hit.tokens
+        if hit.cow_src is not None:
+            # copy-on-write: duplicate the shared block's pages into the
+            # request's first fresh (private) block on device, then drop
+            # the temporary source reference — the request resumes its
+            # chunked deposit mid-block and overwrites only the
+            # divergent tail, never touching the shared source
+            dst = self.kv.blocks_of(slot)[len(hit.blocks)]
+            buf = self._cow_clone(self.kv.buffers, jnp.int32(hit.cow_src),
+                                  jnp.int32(dst))
+            self.kv.swap_buffers(self._prefill_stream.ordered(buf))
+            self.prefix_cache.release_cow(hit.cow_src)
+            resident += hit.cow_tokens
+            self.prefix_cow_clones += 1
+        if resident:
+            self.kv.advance(slot, resident)
+        plen = req.prompt_len
+        self.prefix_lookups += 1
+        self.prefix_prompt_tokens += plen
+        if resident:
+            C = self.prefill_chunk
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += resident
+            self.prefill_dispatches_saved += (
+                -(-plen // C) - -(-(plen - resident) // C))
+            req.prefix_hit_tokens = resident
+            self.scheduler.reprice_prefix(
+                req, resident, cow_blocks=int(hit.cow_src is not None))
+        return slot, resident
 
     def _prefill_chunk_step(self, now: float) -> List[ServeRequest]:
         """One fused dispatch: the next chunk of up to
@@ -683,6 +791,12 @@ class ContinuousEngine:
             if tok0_np is None:       # host sync only when a prompt completes
                 tok0_np = np.asarray(tok0)
             self._prefilling.remove(job)
+            if self.prefix_cache is not None:
+                # index the finished prompt's full blocks now — before
+                # the request can finish immediately (EOS first token)
+                # and free them down to parked
+                self.prefix_cache.insert(job.tokens,
+                                         self.kv.blocks_of(job.slot))
             done = self._install_first_token(job.slot, job.req,
                                              int(tok0_np[i]), now)
             if done is not None:
@@ -829,12 +943,18 @@ class ContinuousEngine:
         self._slot_req[slot] = req
         self._slot_out[slot] = handoff.out
 
-    def reset(self, *, strict: bool = False) -> None:
+    def reset(self, *, strict: bool = False,
+              preserve_prefix: bool = False) -> None:
         """Return the engine to its post-construction state: every slot
         freed, device-side sampling/position state re-zeroed (positions
         parked), scheduler queues and accounting cleared. Used by traffic
         drivers after jit warm-up so warm requests leave no stale device
         state or accounting behind (compiled programs are kept).
+
+        ``preserve_prefix=True`` (prefix cache only) keeps the parked
+        radix index and the device pool content across the reset — the
+        warm-cache trial: rows, counters and scheduler state clear, the
+        cache stays populated.
 
         Slots still holding requests are lease leaks: named via
         ``LeaseLeakWarning``, or ``LeaseLeakError`` when ``strict``."""
@@ -844,11 +964,23 @@ class ContinuousEngine:
         self._slot_out = [None] * S
         self._prefilling.clear()
         self.ready_handoffs.clear()
-        self.kv.reset(strict=strict)
+        if self.prefix_cache is not None and preserve_prefix:
+            self.kv.reset_rows(strict=strict)
+        else:
+            if self.prefix_cache is not None:
+                # drop the cache's references first: parked blocks are
+                # retention by design, not leaks for the pool to name
+                self.prefix_cache.clear()
+            self.kv.reset(strict=strict)
         self.scheduler.reset()
         self.peak_live = 0
         self._resident_tok_sum = 0
         self._reserved_tok_sum = 0
+        self.prefix_lookups = self.prefix_hits = 0
+        self.prefix_hit_tokens = self.prefix_prompt_tokens = 0
+        self.prefill_dispatches_saved = self.prefix_cow_clones = 0
+        if self.prefix_cache is not None:
+            self.prefix_cache.reset_stats()
 
     # -- batch-API convenience (parity with StaticEngine.generate) --------
     def generate(self, batch, max_new_tokens: int, *,

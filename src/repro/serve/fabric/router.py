@@ -153,7 +153,7 @@ class ServingFabric:
         stopping at the dispatch window (bounded per-rank backlog)."""
         while True:
             w = self.placement.select_submit(self.workers)
-            if w is None or w.load >= self.dispatch_window:
+            if w is None or w.queue_depth >= self.dispatch_window:
                 return
             admitted = self.scheduler.admit(now, 1)
             if not admitted:
@@ -203,8 +203,8 @@ class ServingFabric:
                 h.req.decode_rank = d.rank
                 h.req.kv_migration_s = cost
                 h.req.kv_blocks_moved = len(h.blocks)
-                w.n_migrated_out += 1
-                d.n_migrated_in += 1
+                w.note_migrated_out(h.req)
+                d.note_migrated_in(h.req)
             w.engine.ready_handoffs.extend(held)
 
     # -- micro-step --------------------------------------------------------

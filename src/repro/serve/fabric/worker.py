@@ -13,8 +13,9 @@ worker does serializes against its peers.
 
 from __future__ import annotations
 
-from typing import List
+from typing import Dict, List
 
+from repro.core import protocol
 from repro.serve.engine import ContinuousEngine
 from repro.serve.scheduler import ServeRequest
 
@@ -36,23 +37,80 @@ class EngineWorker:
         self.n_migrated_in = 0     # decode rank: handoffs received
         self.n_finished = 0
         self.tokens_out = 0        # generated tokens of requests finished here
+        # -- predicted-cost load (join-shortest-queue input) --
+        # rid -> modeled seconds of work this rank still owes the
+        # request; summed into _load_s so `load` is O(1)
+        self._cost_s: Dict[int, float] = {}
+        self._load_s = 0.0
 
     # -- intake ------------------------------------------------------------
     def submit(self, req: ServeRequest, now: float = 0.0) -> str:
         """Accept a router dispatch into this rank's engine scheduler."""
         req.rank = self.rank
         self.n_dispatched += 1
-        return self.engine.submit(req, now)
+        out = self.engine.submit(req, now)
+        self._track(req, self.predicted_cost_s(req))
+        return out
 
     # -- load metric (join-shortest-queue input) ---------------------------
+    def predicted_cost_s(self, req: ServeRequest,
+                         decode_only: bool = False) -> float:
+        """Modeled seconds of work this request brings to a rank (paper
+        §3.2 protocol model): the prompt deposit priced exactly as the
+        engine scheduler will price it (chunked/paged when configured),
+        plus one interthread token-handoff per decode step. A
+        count-based JSQ rates a 16-token and a 256-token prompt the
+        same; this is the unit fix — ranks equalize modeled *work*, not
+        request count. ``decode_only`` is the migrated-in share: the
+        decode rank never re-pays the prompt deposit."""
+        s = self.engine.scheduler
+        m = s.host_model
+        cost = req.max_new_tokens * protocol.interthread_latency(
+            s.itemsize, m)
+        if not decode_only:
+            nbytes = req.prompt_len * s.itemsize
+            proto = protocol.select_protocol(nbytes, interthread=True,
+                                             cell=s.cell_size)
+            cost += s._price(nbytes, proto)
+        return cost
+
+    def _track(self, req: ServeRequest, cost: float) -> None:
+        self._cost_s[req.rid] = cost
+        self._load_s += cost
+
+    def _untrack(self, req: ServeRequest) -> None:
+        self._load_s -= self._cost_s.pop(req.rid, 0.0)
+
     @property
-    def load(self) -> int:
-        """Requests this rank is responsible for right now: queued in
-        its engine scheduler plus live in its KV pool (held handoffs
-        keep their rows leased, so they count as live until migrated —
-        exactly the backpressure the prefill JSQ should see)."""
+    def load(self) -> float:
+        """Predicted seconds of work this rank is responsible for right
+        now: the summed protocol-model cost of every request queued,
+        prefilling, decoding, or held as an unmigrated handoff here
+        (held handoffs keep their rows leased, so their cost stays on
+        the prefill rank until migrated — exactly the backpressure the
+        prefill JSQ should see)."""
+        return self._load_s
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests this rank is responsible for right now — the
+        dispatch-window backpressure gate (a *count* bound on per-rank
+        backlog; `load` is the JSQ placement key)."""
         e = self.engine
         return e.scheduler.num_waiting + e.kv.num_live
+
+    # -- migration accounting (disaggregated placement) --------------------
+    def note_migrated_out(self, req: ServeRequest) -> None:
+        """A handoff shipped from this prefill rank: its remaining work
+        (the decode share) now belongs to the decode rank."""
+        self.n_migrated_out += 1
+        self._untrack(req)
+
+    def note_migrated_in(self, req: ServeRequest) -> None:
+        """A handoff landed on this decode rank: it owes the decode
+        share only (the prompt deposit already happened upstream)."""
+        self.n_migrated_in += 1
+        self._track(req, self.predicted_cost_s(req, decode_only=True))
 
     @property
     def idle(self) -> bool:
@@ -66,6 +124,8 @@ class EngineWorker:
         self.busy_steps += int(busy)
         self.n_finished += len(finished)
         self.tokens_out += sum(r.generated for r in finished)
+        for r in finished:
+            self._untrack(r)
         return finished
 
     # -- reporting ---------------------------------------------------------
@@ -83,6 +143,9 @@ class EngineWorker:
             "migrated_out": float(self.n_migrated_out),
             "finished": float(self.n_finished),
             "tokens": float(self.tokens_out),
+            # residual predicted work (0 after a drained trial) — the
+            # JSQ key the router was balancing on
+            "predicted_load_s": float(self._load_s),
         }
 
     def reset(self) -> None:
@@ -97,3 +160,5 @@ class EngineWorker:
         self.n_migrated_in = 0
         self.n_finished = 0
         self.tokens_out = 0
+        self._cost_s.clear()
+        self._load_s = 0.0

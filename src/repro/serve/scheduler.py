@@ -62,6 +62,8 @@ class ServeRequest:
     # decoding -> done; monolithic admission skips straight to decoding
     state: str = "queued"
     prefill_chunks: int = 0               # chunk dispatches this rode in
+    prefix_hit_tokens: int = 0            # prompt tokens served from the
+                                          # radix prefix cache (no prefill)
     # -- stamped by the serving fabric (DESIGN.md §10) --
     rank: int = -1                        # engine rank that served/prefilled
     decode_rank: int = -1                 # disagg: rank that decoded
@@ -143,6 +145,11 @@ class CellQueueScheduler:
         self.n_deferred = 0           # overflow + rendezvous submissions
         self.n_block_deferrals = 0    # admissions stalled on free blocks
         self.modeled_admit_cost_s = 0.0
+        # prefix-cache repricing (DESIGN.md §12): hits replace the full
+        # admission price with the cheap table-lease walk
+        self.n_prefix_hits = 0
+        self.prefix_tokens_saved = 0
+        self.modeled_prefix_hit_cost_s = 0.0
 
     def reset(self) -> None:
         """Drop all queued/finished requests and zero the accounting —
@@ -159,6 +166,9 @@ class CellQueueScheduler:
         self.n_deferred = 0
         self.n_block_deferrals = 0
         self.modeled_admit_cost_s = 0.0
+        self.n_prefix_hits = 0
+        self.prefix_tokens_saved = 0
+        self.modeled_prefix_hit_cost_s = 0.0
 
     # -- classification ----------------------------------------------------
     def _price(self, nbytes: int, proto: str) -> float:
@@ -188,6 +198,34 @@ class CellQueueScheduler:
                      if req.protocol in EAGER_CLASS else 0)
         self.modeled_admit_cost_s += req.admit_cost_s
         return req.protocol
+
+    def reprice_prefix(self, req: ServeRequest, hit_tokens: int,
+                       cow_blocks: int = 0) -> float:
+        """Re-price an admission whose prompt prefix was served from the
+        radix cache: the hit tokens never stream through the queue — they
+        cost a trie walk plus per-block table-lease envelopes (and a
+        one-block copy per CoW clone), modeled by
+        :func:`repro.core.protocol.prefix_hit_latency`. Only the miss
+        suffix still pays the ordinary chunked/paged deposit price.
+
+        Called by the engine at admission (it is the one that knows the
+        hit length); replaces ``req.admit_cost_s`` and patches
+        ``modeled_admit_cost_s`` (the full price was already accumulated
+        by ``_classify`` at submit). Returns the new price."""
+        hit_bytes = int(hit_tokens) * self.itemsize
+        miss_bytes = max(0, req.nbytes - hit_bytes)
+        bb = self.block_bytes if self.block_bytes > 0 else self.cell_size
+        new_cost = protocol.prefix_hit_latency(
+            hit_bytes, bb, self.host_model, cow_blocks=cow_blocks)
+        if miss_bytes > 0:
+            new_cost += self._price(miss_bytes, req.protocol)
+        self.modeled_admit_cost_s += new_cost - req.admit_cost_s
+        self.modeled_prefix_hit_cost_s += new_cost
+        self.n_prefix_hits += 1
+        self.prefix_tokens_saved += int(hit_tokens)
+        req.admit_cost_s = new_cost
+        req.prefix_hit_tokens = int(hit_tokens)
+        return new_cost
 
     # -- submission --------------------------------------------------------
     def submit(self, req: ServeRequest, now: float = 0.0) -> str:
@@ -319,11 +357,18 @@ class TraceEntry:
     max_new: int
     temperature: float = 0.0
     prompt_len: int = 0
+    # shared-prefix workloads: requests in the same group open with the
+    # same ``prefix_len`` template tokens (few-shot preamble / system
+    # prompt); -1 = independent prompt
+    prefix_group: int = -1
+    prefix_len: int = 0
 
 
 def make_trace(n_requests: int, *, prompt_len, max_new,
                arrival: str = "poisson", rate: float = 100.0,
                burst: int = 4, temperature: float = 0.0,
+               shared_prefix_len: int = 0, share_ratio: float = 1.0,
+               prefix_groups: int = 1,
                seed: int = 0) -> List[TraceEntry]:
     """Arrival trace: ``arrival`` is ``"poisson"`` (exponential gaps at
     ``rate`` req/s), ``"burst"`` (groups of ``burst`` at 1/rate spacing)
@@ -331,7 +376,16 @@ def make_trace(n_requests: int, *, prompt_len, max_new,
     inclusive ``(lo, hi)`` range sampled per request. ``prompt_len`` is an
     int or a sequence cycled across requests — e.g. ``(16, 256)`` yields
     the short/long interleave that exposes prefill head-of-line
-    blocking."""
+    blocking.
+
+    ``shared_prefix_len > 0`` turns on the shared-prefix workload shape
+    (system prompt / few-shot template): each request joins one of
+    ``prefix_groups`` template families with probability ``share_ratio``
+    and opens with that family's first ``min(shared_prefix_len,
+    prompt_len)`` tokens; the suffix stays per-request random. The
+    prompt *tokens* are materialized downstream
+    (``launch.serve.requests_from_trace``) — the trace only records the
+    group and overlap length."""
     rng = np.random.default_rng(seed)
     if arrival == "poisson":
         gaps = rng.exponential(1.0 / rate, size=n_requests)
@@ -350,10 +404,22 @@ def make_trace(n_requests: int, *, prompt_len, max_new,
         news = rng.integers(lo, hi + 1, size=n_requests)
     plens = ([int(prompt_len)] if isinstance(prompt_len, (int, np.integer))
              else [int(p) for p in prompt_len])
-    return [TraceEntry(arrival=float(times[i]), max_new=int(news[i]),
-                       temperature=temperature,
-                       prompt_len=plens[i % len(plens)])
-            for i in range(n_requests)]
+    out = [TraceEntry(arrival=float(times[i]), max_new=int(news[i]),
+                      temperature=temperature,
+                      prompt_len=plens[i % len(plens)])
+           for i in range(n_requests)]
+    if shared_prefix_len > 0:
+        if not 0.0 <= share_ratio <= 1.0:
+            raise ValueError(f"share_ratio {share_ratio} not in [0, 1]")
+        if prefix_groups < 1:
+            raise ValueError("need at least one prefix group")
+        for e in out:
+            # a 1-token "shared prefix" is pointless (the engine always
+            # re-prefills the final prompt token to seed decode)
+            if e.prompt_len > 1 and rng.random() < share_ratio:
+                e.prefix_group = int(rng.integers(prefix_groups))
+                e.prefix_len = min(int(shared_prefix_len), e.prompt_len)
+    return out
 
 
 def shard_trace(trace: List[TraceEntry], replica: int,

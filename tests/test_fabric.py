@@ -123,6 +123,58 @@ def test_replicated_token_identity_and_balance(bundle, baseline):
         fab.close()
 
 
+def test_jsq_balances_predicted_cost_not_count(bundle):
+    """The JSQ load metric is predicted *work* (protocol-model seconds),
+    not request count. On an alternating 16/256-token trace, count-JSQ
+    deals strictly alternately — one rank ends up with every long
+    prompt; cost-JSQ splits the long prompts across ranks because a
+    256-token deposit weighs ~an order of magnitude more than a
+    16-token one."""
+    import warnings
+    cfg, model, params = bundle
+    fab = ServingFabric(model, params, ranks=2, placement="replicated",
+                        cache_len=320, slots_per_rank=4,
+                        prefill_chunk=CHUNK, block_size=16)
+    try:
+        reqs = []
+        for rid in range(8):
+            plen = 16 if rid % 2 == 0 else 256
+            b = make_synthetic_batch(cfg, 1, plen, seed=3000 + rid,
+                                     compute_dtype="float32")
+            reqs.append(ServeRequest(
+                rid=rid, batch={"tokens": np.asarray(b["tokens"])},
+                max_new_tokens=2))
+        for r in reqs:
+            fab.submit(r, 0.0)
+        fab._dispatch(0.0)
+        assert all(r.rank >= 0 for r in reqs)       # window 8: all dealt
+        w0, w1 = fab.workers
+        # load is modeled seconds now; queue_depth keeps the old count
+        assert isinstance(w0.load, float)
+        assert w0.queue_depth + w1.queue_depth == 8
+        # a long deposit costs much more than a short one, decode equal
+        heavy = w0.predicted_cost_s(reqs[1])
+        light = w0.predicted_cost_s(reqs[0])
+        assert heavy > 3 * light
+        toks = {w.rank: sum(r.prompt_len for r in reqs if r.rank == w.rank)
+                for w in fab.workers}
+        heavies = {w.rank: sum(1 for r in reqs
+                               if r.rank == w.rank and r.prompt_len == 256)
+                   for w in fab.workers}
+        # count-JSQ's failure mode: all four 256s on one rank (1024 vs
+        # 64 tokens). Cost-JSQ must split them, and each rank's share
+        # of prompt work stays within the weight of one long prompt.
+        assert min(heavies.values()) >= 1, (heavies, toks)
+        assert max(toks.values()) - min(toks.values()) <= 256, toks
+        # greedy bound: final modeled loads differ by at most one
+        # request's cost
+        assert abs(w0.load - w1.load) <= heavy + 1e-12
+    finally:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")   # dispatch-only: in flight
+            fab.close()
+
+
 def test_dispatch_window_backpressure(bundle):
     cfg, model, params = bundle
     fab = _fabric(model, params, "replicated", dispatch_window=1)

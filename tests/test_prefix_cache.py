@@ -1,0 +1,318 @@
+"""Radix-tree prefix cache (DESIGN.md §12): trie lookup/insert, partial
+(CoW) hits, the park/lease lifecycle, LRU eviction with live-descendant
+pinning — plus engine-level evidence that a warm cache changes *work*,
+never *tokens* (cached-vs-cold output identity).
+
+Property tests ride hypothesis when available (same split as
+``tests/test_block_pool.py``); the deterministic tests always run.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serve.block_pool import BlockPool
+from repro.serve.kv_cache import SlotError
+from repro.serve.prefix_cache import PrefixCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property subset needs pip install repro[test]
+    given = None
+
+BS = 4
+
+
+def _cache(num_blocks=16):
+    pool = BlockPool(num_blocks=num_blocks, block_size=BS)
+    return pool, PrefixCache(pool)
+
+
+def _park_chain(pool, cache, toks, owner="req-0"):
+    """Alloc + insert + free: the canonical finished-request path. The
+    chain's blocks end up parked (sole ref = the cache's)."""
+    blocks = pool.alloc(len(toks) // BS, owner)
+    cache.insert(toks, blocks)
+    pool.free(blocks)
+    return blocks
+
+
+# ---------------------------------------------------------------------------
+# trie lookup / insert
+# ---------------------------------------------------------------------------
+
+def test_empty_cache_misses():
+    _, cache = _cache()
+    hit = cache.lookup(list(range(12)))
+    assert hit.blocks == [] and hit.tokens == 0
+    assert hit.cow_src is None and hit.cow_tokens == 0
+
+
+def test_insert_lookup_roundtrip_full_blocks():
+    pool, cache = _cache()
+    toks = list(range(12))
+    blocks = _park_chain(pool, cache, toks)
+    hit = cache.lookup(toks)
+    assert hit.blocks == blocks and hit.tokens == 12
+    assert hit.cow_src is None and hit.n_parked == 3
+    assert cache.num_cached == 3 and cache.num_parked == 3
+
+
+def test_partial_hit_names_cow_source():
+    """A prompt diverging mid-block hits the full-block prefix and names
+    the divergent cached block as the CoW source."""
+    pool, cache = _cache()
+    toks = list(range(12))
+    blocks = _park_chain(pool, cache, toks)
+    fork = toks[:9] + [91, 92, 93]            # diverges 1 token into block 3
+    hit = cache.lookup(fork)
+    assert hit.blocks == blocks[:2] and hit.tokens == 8
+    assert hit.cow_src == blocks[2] and hit.cow_tokens == 1
+    assert hit.total_tokens == 9
+
+
+def test_limit_clamps_to_partial():
+    """The engine clamps limit one token short of the prompt so the last
+    chunk re-prefills; the trie answers with a partial hit there."""
+    pool, cache = _cache()
+    toks = list(range(12))
+    blocks = _park_chain(pool, cache, toks)
+    hit = cache.lookup(toks, limit=11)
+    assert hit.blocks == blocks[:2] and hit.tokens == 8
+    assert hit.cow_src == blocks[2] and hit.cow_tokens == 3
+
+
+def test_duplicate_insert_keeps_first_copy():
+    pool, cache = _cache()
+    toks = list(range(8))
+    first = pool.alloc(2, "a")
+    assert cache.insert(toks, first) == 2
+    second = pool.alloc(2, "b")
+    assert cache.insert(toks, second) == 0     # loser stays unindexed
+    pool.free(first)
+    pool.free(second)
+    assert cache.num_parked == 2               # only the first copy parked
+    hit = cache.lookup(toks)
+    assert hit.blocks == [int(b) for b in first]
+    assert pool.num_live == 2                  # loser's blocks fully freed
+
+
+# ---------------------------------------------------------------------------
+# park / lease lifecycle
+# ---------------------------------------------------------------------------
+
+def test_lease_unparks_and_refs():
+    pool, cache = _cache()
+    toks = list(range(12))
+    _park_chain(pool, cache, toks)
+    hit = cache.lookup(toks)
+    cache.lease(hit, "req-9")
+    assert cache.num_parked == 0
+    assert all(pool.refcount(b) == 2 for b in hit.blocks)
+    pool.free(hit.blocks)                      # request done -> re-parked
+    assert cache.num_parked == 3
+    assert all(pool.refcount(b) == 1 for b in hit.blocks)
+    cache.check()
+
+
+def test_cow_lease_release_roundtrip():
+    """The CoW source gets a temporary reference for the clone window;
+    releasing it re-parks the block without ever freeing it."""
+    pool, cache = _cache()
+    toks = list(range(8))
+    _park_chain(pool, cache, toks)
+    fork = toks[:6] + [91, 92]
+    hit = cache.lookup(fork)
+    assert hit.cow_tokens == 2 and hit.cow_src is not None
+    cache.lease(hit, "req-c")
+    assert pool.refcount(hit.cow_src) == 2
+    cache.release_cow(hit.cow_src)
+    assert pool.refcount(hit.cow_src) == 1     # cache ref survives
+    assert cache.num_cached == 2               # still indexed
+    pool.free(hit.blocks)
+    cache.check()
+
+
+def test_pool_counts_parked_as_free():
+    """Admission math: parked blocks are reclaimable, so the pool counts
+    them free until a lease pins them."""
+    pool, cache = _cache()
+    _park_chain(pool, cache, list(range(12)))
+    assert pool.num_free == 16                 # 13 on free list + 3 parked
+    hit = cache.lookup(list(range(12)))
+    cache.lease(hit, "pin")
+    assert pool.num_free == 13                 # leased blocks stop counting
+    pool.free(hit.blocks)
+    assert pool.num_free == 16
+
+
+# ---------------------------------------------------------------------------
+# LRU eviction under pressure
+# ---------------------------------------------------------------------------
+
+def test_reclaim_evicts_lru_oldest_first():
+    pool, cache = _cache(num_blocks=4)
+    _park_chain(pool, cache, [0, 1, 2, 3], "old")      # parks first (LRU old)
+    _park_chain(pool, cache, [7, 6, 5, 4], "new")      # parks second
+    blocks = pool.alloc(3, "pressure")                 # 2 free + 1 reclaimed
+    assert len(blocks) == 3
+    assert cache.lookup([0, 1, 2, 3]).tokens == 0      # oldest evicted
+    assert cache.lookup([7, 6, 5, 4]).tokens == 4      # newest survived
+    assert cache.n_evictions == 1
+    pool.free(blocks)
+
+
+def test_live_descendant_pins_parked_parent():
+    """A parked node above a live path is not evictable — dropping it
+    would orphan the descendant's prefix."""
+    pool, cache = _cache(num_blocks=4)
+    toks = list(range(8))
+    _park_chain(pool, cache, toks)                     # chain of 2, parked
+    hit = cache.lookup(toks)
+    cache.lease(hit, "r2")                             # both live again
+    pool.free([hit.blocks[0]])                         # parent parks, child live
+    assert cache.evictable() == 0
+    with pytest.raises(SlotError, match="exhausted"):
+        pool.alloc(3, "starved")                       # 2 free, nothing evictable
+    pool.free([hit.blocks[1]])                         # child parks too
+    blocks = pool.alloc(3, "fits-now")                 # subtree evicted whole
+    assert len(blocks) == 3 and cache.num_cached == 0
+    pool.free(blocks)
+    assert pool.num_live == 0
+
+
+def test_eviction_frees_whole_parked_subtree():
+    pool, cache = _cache(num_blocks=8)
+    _park_chain(pool, cache, list(range(12)))          # chain of 3
+    assert cache.reclaim(1) == 3                       # subtree goes together
+    assert cache.num_cached == 0 and pool.num_free == 8
+    assert cache.n_evictions == 3
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (skipped without hypothesis, like test_block_pool)
+# ---------------------------------------------------------------------------
+
+if given is not None:
+
+    @given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 7)),
+                    max_size=40))
+    @settings(max_examples=50, deadline=None)
+    def test_conservation_under_random_traffic(ops):
+        """Arbitrary insert/finish/reclaim interleavings: every block is
+        on the free list xor leased (parked counts as leased-by-cache),
+        and the trie invariants hold after every op."""
+        pool, cache = _cache(num_blocks=8)
+        rng = np.random.default_rng(7)
+        live = []
+        for kind, x in ops:
+            if kind == 0 and pool.num_free >= 2:
+                toks = [int(t) for t in rng.integers(0, 3, size=8)]
+                try:
+                    blocks = pool.alloc(2, f"req{x}")
+                except SlotError:      # evictable subset pinned mid-walk
+                    continue
+                cache.insert(toks, blocks)
+                live.append(blocks)
+            elif kind == 1 and live:
+                pool.free(live.pop(x % len(live)))
+            elif kind == 2:
+                cache.reclaim(x)
+            cache.check()
+            assert (pool.num_free - cache.evictable()
+                    + pool.num_live == 8)
+        for blocks in live:
+            pool.free(blocks)
+        cache.clear()
+        assert pool.num_free == 8 and pool.num_live == 0
+
+    @given(st.integers(1, 5))
+    @settings(max_examples=25, deadline=None)
+    def test_nway_lease_refcount_roundtrip(n):
+        """N concurrent warm requests over one cached chain: refcount is
+        exactly N+1 while leased and 1 (parked) after all finish."""
+        pool, cache = _cache()
+        toks = list(range(8))
+        _park_chain(pool, cache, toks)
+        hits = [cache.lookup(toks) for _ in range(n)]
+        for i, h in enumerate(hits):
+            cache.lease(h, f"req{i}")
+        assert all(pool.refcount(b) == n + 1 for b in hits[0].blocks)
+        for h in hits:
+            pool.free(h.blocks)
+        assert cache.num_parked == 2
+        assert all(pool.refcount(b) == 1 for b in hits[0].blocks)
+        cache.check()
+
+    @given(st.integers(1, 3))
+    @settings(max_examples=20, deadline=None)
+    def test_cow_source_survives_any_divergence_point(k):
+        """Wherever the fork lands inside a block, the CoW source is
+        leased, released, and left cached — never freed or mutated in
+        the index."""
+        pool, cache = _cache()
+        toks = list(range(8))
+        _park_chain(pool, cache, toks)
+        fork = toks[:4 + k] + [91] * (4 - k)
+        hit = cache.lookup(fork, limit=8)
+        assert hit.cow_tokens == k and hit.cow_src is not None
+        cache.lease(hit, "req-c")
+        assert pool.refcount(hit.cow_src) == 2
+        cache.release_cow(hit.cow_src)
+        assert pool.refcount(hit.cow_src) == 1
+        assert cache.lookup(toks).tokens == 8      # index intact
+        pool.free(hit.blocks)
+        cache.check()
+
+
+# ---------------------------------------------------------------------------
+# engine level: warm cache changes work, never tokens
+# ---------------------------------------------------------------------------
+
+def test_engine_warm_cache_token_identical_and_saves_prefill():
+    """Cold (cache off), cold (cache on, empty trie), and warm (trie
+    preserved across reset) runs emit bitwise-identical tokens; the warm
+    run documents the saved work: >0.5 token hit rate, skipped prefill
+    dispatches, and CoW clones for the partial last block."""
+    import jax
+
+    from repro.config import ServeConfig, TrainConfig
+    from repro.configs import get_smoke_config
+    from repro.models.registry import build_model, make_synthetic_batch
+    from repro.serve import ContinuousEngine, StaticEngine
+
+    cfg = get_smoke_config("gemma-2b")
+    train = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                        loss_chunk=16, attn_chunk_threshold=64,
+                        attn_chunk=16, remat=False)
+    model = build_model(cfg, train, ServeConfig(), tp=1)
+    if model.decode_step_paged is None or model.clone_paged_block is None:
+        pytest.skip("paged decode/clone unavailable for this arch")
+    params = model.init(jax.random.PRNGKey(0))
+
+    B, S, SPL = 4, 16, 12                       # 12-token shared prefix
+    batch = make_synthetic_batch(cfg, B, S, compute_dtype="float32")
+    toks = np.array(batch["tokens"])
+    toks[:, :SPL] = toks[0, :SPL]
+    prompt = {"tokens": toks}
+
+    ref = StaticEngine(model, params, cache_len=24).generate(prompt, 6)
+    eng = ContinuousEngine(model, params, cache_len=24, num_slots=4,
+                           prefill_chunk=4, kv_layout="paged",
+                           block_size=4, num_blocks=40, prefix_cache=True)
+    cold = eng.generate(prompt, 6)
+    eng.reset(preserve_prefix=True)             # keep the trie, free rows
+    warm = eng.generate(prompt, 6)
+
+    assert np.array_equal(ref, cold)
+    assert np.array_equal(cold, warm)
+
+    stats = eng.prefix_stats()
+    assert stats["prefix_hit_rate"] > 0.5       # 15/16 tokens resident
+    assert stats["prefill_tokens_saved"] > 0
+    assert stats["prefill_dispatches_saved"] > 0
+    assert stats["prefix_cow_clones"] >= 1      # partial last block clones
+    assert stats["prefix_modeled_hit_cost_us"] > 0
+
+    eng.reset()                                 # cold reset drops the trie
+    assert eng.prefix_cache.num_cached == 0
+    assert eng.kv.pool.num_free == 40 and eng.kv.pool.num_live == 0

@@ -215,6 +215,72 @@ def test_clean_reset_no_findings(san):
 
 
 # ---------------------------------------------------------------------------
+# shared refcounts (prefix caching): N-way provenance end to end
+# ---------------------------------------------------------------------------
+
+def test_shared_ref_double_free_provenance(san):
+    """A double free on a prefix-shared block reports the WHOLE chain:
+    allocation, every ref() (who and where), every shared (non-final)
+    free, and the final free — not just the allocator."""
+    pool = BlockPool(8, 4)
+    [b] = pool.alloc(1, "req-a")
+    pool.ref(b, owner="prefix-cache")       # shared lease
+    pool.free([b])                          # req-a done (non-final drop)
+    pool.free([b])                          # cache evicts (final)
+    with pytest.raises(SlotError) as ei:
+        pool.free([b])                      # the bug under test
+    msg = str(ei.value)
+    assert "shared 2-way" in msg
+    assert "ref'd at" in msg and "'prefix-cache'" in msg
+    assert "allocated at" in msg and "first freed at" in msg
+    assert "shared refs freed at" in msg
+    assert "test_sanitizer" in msg          # caller sites, not pool code
+    assert len(san.findings_of("double-free")) == 1
+
+
+def test_trie_parked_leak_named_at_reset(san):
+    """A bare pool.reset() while the prefix cache still holds parked
+    blocks names the cache's shared reference in each leak finding —
+    the trie's +1 is a lease like any other."""
+    from repro.serve.prefix_cache import PrefixCache
+    pool = BlockPool(8, 4)
+    cache = PrefixCache(pool)
+    blocks = pool.alloc(2, "req-0")
+    cache.insert(list(range(8)), blocks)    # trie refs both blocks
+    pool.free(blocks)                       # request done -> parked
+    with pytest.warns(LeaseLeakWarning):
+        pool.reset()
+    hits = san.findings_of("lease-leak")
+    assert len(hits) == 2
+    assert all("prefix-cache" in h.message for h in hits)
+    assert all("allocated at" in h.message for h in hits)
+    assert all("shared 2-way" in h.message for h in hits)
+    # the pool told the cache to drop its index (without re-freeing)
+    assert cache.num_cached == 0 and pool.num_free == 8
+
+
+def test_shared_lifecycle_clean(san):
+    """The balanced negative: insert -> park -> warm lease -> park ->
+    clear leaves the pool fully free and the sanitizer silent."""
+    from repro.serve.prefix_cache import PrefixCache
+    pool = BlockPool(8, 4)
+    cache = PrefixCache(pool)
+    toks = list(range(8))
+    blocks = pool.alloc(2, "req-0")
+    cache.insert(toks, blocks)
+    pool.free(blocks)                        # parked under the trie
+    hit = cache.lookup(toks + [9], limit=8)
+    assert hit.tokens == 8
+    cache.lease(hit, "req-1")                # warm reuse
+    pool.free(hit.blocks)                    # req-1 done -> parked again
+    cache.clear()                            # cache drops its own refs
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        pool.reset()
+    assert san.findings == []
+
+
+# ---------------------------------------------------------------------------
 # permanent pool checks (sanitizer NOT installed)
 # ---------------------------------------------------------------------------
 

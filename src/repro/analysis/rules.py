@@ -1,12 +1,15 @@
 """Repo-specific AST lint rules (DESIGN.md §11).
 
-Five rules, each enforcing an invariant the generic linters cannot see
+Six rules, each enforcing an invariant the generic linters cannot see
 because it lives in this repo's conventions (drop-mode scatters over
-parked slots, jit donation, Request lifecycles, MPIX-stream regions,
-host/device sync discipline):
+parked slots, carried-state threading, jit donation, Request
+lifecycles, MPIX-stream regions, host/device sync discipline):
 
 * ``scatter-drop``   — slot/block-table-indexed ``.at[...]`` writes must
   carry explicit ``mode="drop"``.
+* ``state-thread``   — ``.at[...]`` writes into carried-state leaves
+  (``conv``/``ssm``/``cross_k``/``cross_v`` — DESIGN.md §13) must carry
+  explicit ``mode="drop"``, whatever the index is named.
 * ``donated-use``    — a buffer passed through a ``donate_argnums`` jit
   must not be read again before it is rebound.
 * ``request-leak``   — every issued ``Request`` must reach
@@ -135,6 +138,76 @@ class ScatterDropRule(Rule):
                 "block-table indices carry out-of-range sentinels by "
                 "design (padding rows, PARK_POS) and XLA's default "
                 "out-of-bounds clamp would silently corrupt a real row"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# state-thread
+# ---------------------------------------------------------------------------
+
+class StateThreadRule(Rule):
+    name = "state-thread"
+    summary = ('carried-state leaf .at[...] writes (conv/ssm/cross_k/'
+               'cross_v) must pass mode="drop"')
+
+    #: names that mark the write TARGET as a carried-state leaf
+    #: (DESIGN.md §13): SSM/hybrid recurrent state and enc-dec cross
+    #: K/V. Complements scatter-drop, which keys on the *index* name —
+    #: a state scatter through an innocuously named index (``idx``)
+    #: still addresses per-request rows whose padding sentinel is out
+    #: of range by design, so the target name is the invariant here.
+    _STATE = re.compile(r"\bconv\b|\bssm\b|cross_k|cross_v", re.IGNORECASE)
+    _WRITE_METHODS = ScatterDropRule._WRITE_METHODS
+
+    @staticmethod
+    def _target_names(expr) -> Set[str]:
+        """Identifiers mentioned in the expression being indexed (the X
+        of ``X.at[...]``): variable names, attribute names, and string
+        keys of dict-style cache access (``cache["conv"]``)."""
+        names: Set[str] = set()
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Name):
+                names.add(n.id)
+            elif isinstance(n, ast.Attribute):
+                names.add(n.attr)
+            elif isinstance(n, ast.Constant) and isinstance(n.value, str):
+                names.add(n.value)
+        return names
+
+    def check(self, tree, filename):
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in self._WRITE_METHODS):
+                continue
+            sub = node.func.value
+            if not (isinstance(sub, ast.Subscript)
+                    and isinstance(sub.value, ast.Attribute)
+                    and sub.value.attr == "at"):
+                continue
+            # the expression being scattered into, minus the ".at"
+            hits = sorted(n for n in self._target_names(sub.value.value)
+                          if self._STATE.search(n))
+            if not hits:
+                continue
+            # a fully-constant index is a compile-time-checked address,
+            # not a per-request scatter — out of scope
+            if all(isinstance(n, ast.Constant)
+                   for n in ast.walk(sub.slice)
+                   if isinstance(n, (ast.Name, ast.Constant))):
+                continue
+            mode = next((kw.value for kw in node.keywords
+                         if kw.arg == "mode"), None)
+            if isinstance(mode, ast.Constant) and mode.value == "drop":
+                continue
+            out.append(Finding(
+                filename, node.lineno, node.col_offset, self.name,
+                f".at[...].{node.func.attr} into carried-state leaf "
+                f"({', '.join(hits)}) must pass mode=\"drop\": state "
+                "rows are per-request and their padding/parked indices "
+                "are out of range by design — the default out-of-bounds "
+                "clamp would overwrite a live request's scan state"))
         return out
 
 
@@ -644,6 +717,7 @@ class HostSyncRule(Rule):
 
 ALL_RULES: Tuple[Rule, ...] = (
     ScatterDropRule(),
+    StateThreadRule(),
     DonatedUseRule(),
     RequestLeakRule(),
     StreamOrderRule(),

@@ -5,24 +5,34 @@ import jax
 import jax.numpy as jnp
 
 
-def ssd_scan_ref(x, dt, A, Bm, Cm):
+def ssd_scan_ref(x, dt, A, Bm, Cm, initial_state=None, *,
+                 return_state: bool = False):
     """Sequential scan: state_{t} = state_{t-1} * exp(dt_t A) + dt_t x_t B_t;
-    y_t = C_t · state_t. Shapes as in ssd_scan_fwd."""
+    y_t = C_t · state_t. Shapes as in ssd_scan_fwd. ``initial_state``
+    (B,H,p,n) seeds the recurrence (zeros when None); ``return_state``
+    additionally returns the final state — the same carried-state
+    contract as the kernel, so chunked-resume tests can use the oracle
+    on both sides."""
     B, H, S, p = x.shape
     n = Bm.shape[-1]
 
-    def per_bh(xb, dtb, a, Bb, Cb):
+    def per_bh(xb, dtb, a, Bb, Cb, s0):
         def step(state, inp):
             xt, dtt, bt, ct = inp
             state = state * jnp.exp(dtt * a) + dtt * xt[:, None] * bt[None, :]
             return state, state @ ct
-        init = jnp.zeros((p, n), jnp.float32)
-        _, ys = jax.lax.scan(step, init, (xb.astype(jnp.float32),
-                                          dtb.astype(jnp.float32),
-                                          Bb.astype(jnp.float32),
-                                          Cb.astype(jnp.float32)))
-        return ys
+        final, ys = jax.lax.scan(step, s0.astype(jnp.float32),
+                                 (xb.astype(jnp.float32),
+                                  dtb.astype(jnp.float32),
+                                  Bb.astype(jnp.float32),
+                                  Cb.astype(jnp.float32)))
+        return ys, final
 
-    f = jax.vmap(jax.vmap(per_bh, in_axes=(0, 0, 0, None, None)),
-                 in_axes=(0, 0, None, 0, 0))
-    return f(x, dt, A, Bm, Cm).astype(x.dtype)
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, p, n), jnp.float32)
+    f = jax.vmap(jax.vmap(per_bh, in_axes=(0, 0, 0, None, None, 0)),
+                 in_axes=(0, 0, None, 0, 0, 0))
+    ys, final = f(x, dt, A, Bm, Cm, initial_state)
+    if return_state:
+        return ys.astype(x.dtype), final
+    return ys.astype(x.dtype)

@@ -23,13 +23,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
-                chunk: int):
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, s0_ref, y_ref, fs_ref,
+                state_scr, *, chunk: int):
     ic = pl.program_id(2)
 
     @pl.when(ic == 0)
     def _init():
-        state_scr[...] = jnp.zeros_like(state_scr)
+        # seed the carried state from the caller (zeros for a fresh
+        # sequence; a previous call's final state to resume a chunked
+        # prefill bit-exactly — DESIGN.md §13)
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
 
     x = x_ref[0, 0].astype(jnp.float32)        # (l, p)
     dt = dt_ref[0, 0].astype(jnp.float32)      # (l,)
@@ -64,23 +67,35 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
     upd = jax.lax.dot_general(
         xdt, Bm * decay_states[:, None], (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)               # (p, n)
-    state_scr[...] = state * jnp.exp(cum[-1]) + upd
+    new_state = state * jnp.exp(cum[-1]) + upd
+    state_scr[...] = new_state
+    # every chunk writes the running state to the same output block —
+    # the last (sequentially final) chunk's write is what survives
+    fs_ref[0, 0] = new_state
 
     y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan_fwd(x, dt, A, Bm, Cm, *, chunk: int = 128,
-                 interpret: bool = True):
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret", "return_state"))
+def ssd_scan_fwd(x, dt, A, Bm, Cm, initial_state=None, *, chunk: int = 128,
+                 interpret: bool = True, return_state: bool = False):
     """x: (B,H,S,p); dt: (B,H,S) (post-softplus); A: (H,) negative;
-    Bm, Cm: (B,S,n) (ngroups=1). Returns y (B,H,S,p)."""
+    Bm, Cm: (B,S,n) (ngroups=1). Returns y (B,H,S,p).
+
+    ``initial_state`` (B,H,p,n) f32 seeds the carried scan state (zeros
+    when None — a fresh sequence); ``return_state=True`` additionally
+    returns the final state, so a chunked prefill can resume the scan
+    from exactly where the previous chunk stopped."""
     B, H, S, p = x.shape
     n = Bm.shape[-1]
     l = min(chunk, S)
     assert S % l == 0, (S, l)
     nc = S // l
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, p, n), jnp.float32)
     kernel = functools.partial(_ssd_kernel, chunk=l)
-    return pl.pallas_call(
+    y, final_state = pl.pallas_call(
         kernel,
         grid=(B, H, nc),
         in_specs=[
@@ -89,9 +104,20 @@ def ssd_scan_fwd(x, dt, A, Bm, Cm, *, chunk: int = 128,
             pl.BlockSpec((1,), lambda b, h, ic: (h,)),
             pl.BlockSpec((1, 1, l, n), lambda b, h, ic: (b, 0, ic, 0)),
             pl.BlockSpec((1, 1, l, n), lambda b, h, ic: (b, 0, ic, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b, h, ic: (b, h, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, l, p), lambda b, h, ic: (b, h, ic, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, S, p), x.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, l, p), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, p), x.dtype),
+            jax.ShapeDtypeStruct((B, H, p, n), jnp.float32),
+        ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
         interpret=interpret,
-    )(x, dt, A, Bm.reshape(B, 1, S, n), Cm.reshape(B, 1, S, n))
+    )(x, dt, A, Bm.reshape(B, 1, S, n), Cm.reshape(B, 1, S, n),
+      initial_state.astype(jnp.float32))
+    if return_state:
+        return y, final_state
+    return y

@@ -52,6 +52,23 @@ from repro.models.registry import build_model, make_synthetic_batch
 from repro.serve import (ContinuousEngine, ServeRequest, ServingFabric,
                          StaticEngine, make_trace)
 
+#: registry families the ``--config`` sweep covers by default: one per
+#: serving structure (dense, MoE, SSM, hybrid, enc-dec) — every family
+#: the state-threaded chunk contract (DESIGN.md §13) must carry
+FAMILY_ARCHS = ("gemma-2b", "olmoe-1b-7b", "mamba2-370m", "hymba-1.5b",
+                "whisper-tiny")
+
+
+def effective_chunk(caps, prefill_chunk: int) -> int:
+    """Capability-aware chunk size: floor to the family's
+    ``chunk_multiple`` (SSM/hybrid scans resume bit-exactly only on
+    ``ssm_chunk`` boundaries), never below one multiple; 0 (monolithic)
+    when the family cannot chunk at all."""
+    if prefill_chunk <= 0 or not caps.chunked_prefill:
+        return 0
+    m = max(1, int(caps.chunk_multiple))
+    return max(m, (prefill_chunk // m) * m)
+
 
 def useful_tokens(row: np.ndarray, eos_id: int) -> int:
     """Tokens a request actually produced: up to and including the first
@@ -258,6 +275,7 @@ def run_fabric(arch: str = "gemma-2b", *, smoke: bool = True,
     if model.decode_step_paged is None:
         raise ValueError(f"arch {cfg.name!r} has no paged decode path; "
                          "the serving fabric runs paged engines only")
+    prefill_chunk = effective_chunk(model.capabilities, prefill_chunk)
     params = model.init(jax.random.PRNGKey(seed))
     plens = ((int(prompt_len),) if isinstance(prompt_len, int)
              else tuple(int(p) for p in prompt_len))
@@ -319,6 +337,65 @@ def run_fabric(arch: str = "gemma-2b", *, smoke: bool = True,
     return result
 
 
+def run_family_rows(archs=FAMILY_ARCHS, *, smoke: bool = True,
+                    requests: int = 6, slots: int = 4,
+                    prompt_len: int = 24, max_new: int = 4,
+                    prefill_chunk: int = 16, block_size: int = 8,
+                    eos_id: int = -1, seed: int = 0) -> List[Dict]:
+    """Per-family serving rows (``--config``, schema v6): drive a small
+    same-arrival trace through each family's continuous *paged* chunked
+    engine and report ``continuous_tok_s`` plus token identity against
+    the family's static monolithic baseline. One row per registry
+    family; a family whose structure forbids the path (patch_stub)
+    reports its capability reason instead of faking a number."""
+    rows: List[Dict] = []
+    for arch in archs:
+        cfg = get_smoke_config(arch) if smoke else get_config(arch)
+        dtype = "float32" if smoke else "bfloat16"
+        tcfg = TrainConfig(param_dtype=dtype, compute_dtype=dtype,
+                           remat=False, loss_chunk=64,
+                           attn_chunk_threshold=4096)
+        model = build_model(cfg, tcfg, ServeConfig(), tp=1)
+        caps = model.capabilities
+        row: Dict = {"family": cfg.name, "block": cfg.block,
+                     "chunked_prefill": bool(caps.chunked_prefill),
+                     "paged_decode": bool(caps.paged_decode),
+                     "carried_state": bool(caps.carried_state),
+                     "prefix_cache": bool(caps.prefix_cache),
+                     "kv_migration": bool(caps.kv_migration)}
+        chunk = effective_chunk(caps, prefill_chunk)
+        if not (chunk and caps.paged_decode):
+            row["skipped"] = caps.reason
+            rows.append(row)
+            continue
+        row["prefill_chunk"] = chunk
+        params = model.init(jax.random.PRNGKey(seed))
+        cache_len = prompt_len + max_new
+        trace = make_trace(requests, prompt_len=prompt_len,
+                           max_new=max_new, arrival="all", seed=seed)
+        reqs = requests_from_trace(cfg, trace, dtype=dtype, seed=seed)
+        eng = ContinuousEngine(model, params, cache_len=cache_len,
+                               num_slots=slots, eos_id=eos_id,
+                               prefill_chunk=chunk, kv_layout="paged",
+                               block_size=block_size)
+        stats = drive_continuous(eng, reqs)
+        row["continuous_tok_s"] = stats["tok_s"]
+        row["ttft_p95_s"] = stats.get("ttft_p95_s")
+        row["state_bytes_per_slot"] = eng._carried_state_bytes()
+        # static monolithic baseline on the same prompts: the greedy
+        # tokens must be identical (the family-parity contract)
+        batch = {k: np.concatenate([r.batch[k] for r in reqs])
+                 for k in reqs[0].batch}
+        s_out = StaticEngine(model, params, cache_len=cache_len,
+                             eos_id=eos_id).generate(batch, max_new)
+        row["static_tok_identical"] = bool(all(
+            np.array_equal(s_out[j, :r.generated],
+                           r.output[:r.generated])
+            for j, r in enumerate(reqs)))
+        rows.append(row)
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # End-to-end harness (imported by benchmarks/bench_serve.py)
 # ---------------------------------------------------------------------------
@@ -371,6 +448,13 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
                        loss_chunk=64, attn_chunk_threshold=4096)
     scfg = ServeConfig(ring_buffer=ring)
     model = build_model(cfg, tcfg, scfg, tp=1)
+    # capability-aware chunk selection (DESIGN.md §13): floor the chunk
+    # to the family's multiple; patch_stub frontends run monolithic; an
+    # enc-dec family chunks on the paged path only, so its slot runs
+    # deposit monolithically while the paged comparison still chunks
+    caps = model.capabilities
+    prefill_chunk = effective_chunk(caps, prefill_chunk)
+    slot_chunk = prefill_chunk if caps.slot_chunk else 0
     params = model.init(jax.random.PRNGKey(seed))
     plens = ((int(prompt_len),) if isinstance(prompt_len, int)
              else tuple(int(p) for p in prompt_len))
@@ -421,12 +505,12 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
         return stats, reqs
 
     if engine in ("continuous", "both"):
-        result["continuous"], slot_reqs = _drive_continuous(prefill_chunk)
+        result["continuous"], slot_reqs = _drive_continuous(slot_chunk)
         # effective chunk size, read back from the engine (clamped to the
-        # slot capacity; 0 when the model family has no chunk step) — the
-        # artifact records real behavior, and a non-chunkable arch must
-        # not fake a chunked-vs-monolithic comparison of two identical
-        # monolithic runs
+        # slot capacity and floored to the family's chunk multiple; 0 =
+        # explicit monolithic, e.g. enc-dec on the slot layout) — the
+        # artifact records real behavior, and a monolithic run must not
+        # fake a chunked-vs-monolithic comparison of two identical runs
         eff_chunk = int(result["continuous"]["prefill_chunk"])
         result["prefill_chunk"] = eff_chunk
         if eff_chunk and chunk_compare:
@@ -439,7 +523,7 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
                     c["ttft_p95_s"] < m["ttft_p95_s"])
             result["prefill_compiles_prompt_len_independent"] = bool(
                 c["prefill_compiles_total"] <= 1.0)
-        if (eff_chunk and paged_compare
+        if (prefill_chunk and paged_compare
                 and model.decode_step_paged is not None):
             # equal-HBM paged run: repartition the slot pool's token
             # capacity into leased blocks; request rows (cheap host state)
@@ -466,7 +550,7 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
             result["slot_bytes_per_resident_token"] = \
                 c["kv_bytes_per_resident_token"]
 
-        if (eff_chunk and prefix_compare
+        if (prefill_chunk and prefix_compare
                 and model.decode_step_paged is not None
                 and model.clone_paged_block is not None):
             bs = block_size
@@ -573,7 +657,7 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
                              eos_id=eos_id).generate(prompt, par_new)
         c_out = ContinuousEngine(model, params, cache_len=cache_len,
                                  num_slots=B, eos_id=eos_id,
-                                 prefill_chunk=prefill_chunk,
+                                 prefill_chunk=slot_chunk,
                                  max_prefill_per_step=max_prefill_per_step,
                                  ).generate(prompt, par_new)
         result["parity_token_identical"] = bool(np.array_equal(s_out, c_out))
@@ -594,6 +678,12 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b", choices=list(ARCH_NAMES))
+    ap.add_argument("--config", default=None, metavar="NAME[,NAME...]",
+                    help="per-family serving rows: drive each named "
+                         "registry config (or 'families' = one per "
+                         "serving structure) through the continuous "
+                         "paged engine and emit continuous_tok_s rows "
+                         "(schema v6) instead of the engine comparison")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--engine", default="both",
                     choices=["static", "continuous", "both"])
@@ -646,6 +736,35 @@ def main():
     args = ap.parse_args()
 
     plens = [int(x) for x in str(args.prompt_len).split(",") if x]
+    if args.config is not None:
+        archs = (FAMILY_ARCHS if args.config in ("families", "all")
+                 else tuple(x for x in args.config.split(",") if x))
+        for a in archs:
+            if a not in ARCH_NAMES:
+                ap.error(f"--config: unknown arch {a!r} "
+                         f"(known: {sorted(ARCH_NAMES)})")
+        rows = run_family_rows(
+            archs, smoke=args.smoke, requests=args.requests,
+            slots=args.slots, prompt_len=plens[0],
+            max_new=args.max_new_hi, prefill_chunk=args.prefill_chunk,
+            block_size=args.kv_block_size, eos_id=args.eos_id,
+            seed=args.seed)
+        for row in rows:
+            if "skipped" in row:
+                print(f"{row['family']:>14}: skipped ({row['skipped']})")
+                continue
+            print(f"{row['family']:>14}: "
+                  f"{row['continuous_tok_s']:8.1f} tok/s  "
+                  f"chunk {row['prefill_chunk']}  "
+                  f"state_bytes/slot {row['state_bytes_per_slot']}  "
+                  f"token_identical={row['static_tok_identical']}")
+        if args.json:
+            payload = {"schema": "repro-serve-bench-v6", "families": rows}
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=1)
+            print(f"wrote {args.json}")
+        return
+
     if args.fabric != "off":
         placements = (("replicated", "disagg") if args.fabric == "both"
                       else (args.fabric,))
@@ -765,7 +884,7 @@ def main():
               f"paged={result.get('parity_token_identical_paged')} "
               f"(prompt_len={result.get('parity_prompt_len')})")
     if args.json:
-        payload = {"schema": "repro-serve-bench-v5", **result}
+        payload = {"schema": "repro-serve-bench-v6", **result}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"wrote {args.json}")

@@ -15,7 +15,8 @@ from jax import lax
 
 from repro.config import ModelConfig
 from repro.models import layers as L
-from repro.models.transformer import kv_store_heads
+from repro.models.transformer import (_layer_put, _layer_slice, _paged_attn,
+                                      kv_store_heads)
 
 MAX_DECODE_POS = 32_768  # decoder learned-position capacity (covers decode_32k)
 
@@ -237,6 +238,156 @@ def make_prefill(cfg: ModelConfig, knobs, tp: int):
         return jnp.where(vocab_ok, logits, L.NEG_INF), cache
 
     return prefill
+
+
+# ---------------------------------------------------------------------------
+# Paged serving path (DESIGN.md §13): encoder pass as a fixed pre-chunk
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     tp: int, compute_dtype, num_rows: int = 0):
+    """Decoder KV block pool + per-row cross-attention carried state.
+
+    The decoder's self-attention KV pages like any dense model; the
+    encoder output enters serving as *carried state* — per-layer cross
+    K/V of fixed shape (enc_seq is a config constant), one row per
+    engine request row, installed once by :func:`make_encode_prechunk`
+    and read-only for the request's whole lifetime."""
+    Lc = cfg.num_layers
+    gs = kv_store_heads(cfg, tp)
+    return {
+        "k": jnp.zeros((Lc, num_blocks, block_size, gs, cfg.head_dim),
+                       compute_dtype),
+        "v": jnp.zeros((Lc, num_blocks, block_size, gs, cfg.head_dim),
+                       compute_dtype),
+        "cross_k": jnp.zeros((Lc, num_rows, cfg.encoder_seq,
+                              cfg.num_kv_heads, cfg.head_dim), compute_dtype),
+        "cross_v": jnp.zeros((Lc, num_rows, cfg.encoder_seq,
+                              cfg.num_kv_heads, cfg.head_dim), compute_dtype),
+    }
+
+
+def make_encode_prechunk(cfg: ModelConfig, knobs, tp: int):
+    """The encoder pass as a fixed pre-chunk: run the (fixed-shape)
+    encoder once at admission and install each request's per-layer cross
+    K/V into its cache row. The chunked decoder prefill then never
+    touches the encoder — enc-dec admission is 'one pre-chunk, then the
+    ordinary chunk stream'."""
+
+    def encode_prechunk(params, cache, frames, rows):
+        """frames (B, T_enc, d); rows (B,) int32 -> cache. Rows aimed at
+        an out-of-range index (padding) drop their write."""
+        enc_out = encode(cfg, params, frames, knobs)
+
+        def body(_, p_l):
+            ck, cv = _cross_kv(cfg, p_l["xattn"], enc_out)
+            return (), (ck, cv)
+        _, (cks, cvs) = lax.scan(body, (), params["dec_blocks"])
+        # cks (L, B, T_enc, Hkv, hd): scatter the admitted rows
+        new_ck = cache["cross_k"].at[:, rows].set(
+            cks.astype(cache["cross_k"].dtype), mode="drop")
+        new_cv = cache["cross_v"].at[:, rows].set(
+            cvs.astype(cache["cross_v"].dtype), mode="drop")
+        return {**cache, "cross_k": new_ck, "cross_v": new_cv}
+
+    return encode_prechunk
+
+
+def _paged_dec_backbone(cfg, params, x, tables, qpos, wvalid, cache, *,
+                        rows=None):
+    """Decoder scan over the paged pool: self-attention through block
+    tables (:func:`_paged_attn` — rope is inert under learned positions),
+    cross-attention against the row-aligned carried cross K/V. ``rows``
+    (chunk mode) gathers the prefilling subset of cross rows; decode mode
+    (rows=None) is row-aligned full-width."""
+    mutable = {"k": cache["k"], "v": cache["v"]}
+
+    def body(carry, xs):
+        h, mut = carry
+        p_l, cross_k, cross_v, idx = xs
+        cache_l = _layer_slice(mut, idx)
+        hn = L.apply_norm(h, p_l["ln1"], cfg)
+        a_out, a_cache = _paged_attn(cfg, p_l["attn"], hn, cache_l,
+                                     tables, qpos, wvalid, True)
+        h = h + a_out
+        if rows is not None:
+            ck = jnp.take(cross_k, rows, axis=0, mode="clip")
+            cv = jnp.take(cross_v, rows, axis=0, mode="clip")
+        else:
+            ck, cv = cross_k, cross_v
+        h = h + _cross_attn(cfg, p_l["xattn"],
+                            L.apply_norm(h, p_l["ln_x"], cfg), ck, cv)
+        h = h + L.mlp_apply(p_l["mlp"], L.apply_norm(h, p_l["ln2"], cfg),
+                            cfg)
+        return (h, _layer_put(mut, a_cache, idx)), None
+
+    (x, mutable), _ = lax.scan(
+        body, (x, mutable),
+        (params["dec_blocks"], cache["cross_k"], cache["cross_v"],
+         jnp.arange(cfg.num_layers)))
+    new_cache = {**mutable, "cross_k": cache["cross_k"],
+                 "cross_v": cache["cross_v"]}
+    return L.apply_norm(x, params["final_norm"], cfg), new_cache
+
+
+def _dec_embed(cfg, params, tokens, qpos, compute_dtype):
+    """Token embedding + learned decoder positions (parked/padded rows
+    clip to position 0 — their outputs are discarded)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    pe = jnp.take(params["dec_pos"],
+                  jnp.clip(qpos, 0, params["dec_pos"].shape[0] - 1), axis=0)
+    return x + pe.astype(compute_dtype)
+
+
+def make_prefill_chunk_paged(cfg: ModelConfig, knobs, tp: int):
+    """Fixed-shape chunked decoder-prompt deposit through block tables —
+    same contract as the decoder-only path (tokens/tables/rows/pos0/
+    n_valid), with cross-attention to the carried encoder state the only
+    extra term."""
+    compute_dtype = L.dtype_of(knobs["compute_dtype"])
+
+    def prefill_chunk(params, cache, tokens, block_tables, rows, pos0,
+                      n_valid):
+        """tokens (B,C) int32; block_tables (B,NB); rows, pos0, n_valid
+        (B,) -> (last-valid-position logits (B,Vp), cache)."""
+        B, C = tokens.shape
+        qpos = pos0[:, None] + jnp.arange(C)[None, :]
+        wvalid = jnp.arange(C)[None, :] < n_valid[:, None]
+        x = _dec_embed(cfg, params, tokens, qpos, compute_dtype)
+        x, new_cache = _paged_dec_backbone(cfg, params, x, block_tables,
+                                           qpos, wvalid, cache, rows=rows)
+        last = jnp.clip(n_valid - 1, 0, C - 1)
+        hidden = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+        w_out = (params["embed"].T if cfg.tie_embeddings
+                 else params["lm_head"])
+        logits = (hidden @ w_out.astype(compute_dtype)).astype(jnp.float32)
+        vocab_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        return jnp.where(vocab_ok, logits, L.NEG_INF), new_cache
+
+    return prefill_chunk
+
+
+def make_decode_step_paged(cfg: ModelConfig, knobs, tp: int):
+    """Batched one-token decode through block tables, row-aligned with
+    the carried cross K/V (row i of the batch IS engine row i)."""
+    compute_dtype = L.dtype_of(knobs["compute_dtype"])
+
+    def decode_step(params, cache, tokens, positions, block_tables):
+        """tokens (B,1) int32, positions (B,), block_tables (B,NB) ->
+        (logits (B,Vp), cache)."""
+        qpos = positions[:, None]
+        wvalid = (positions >= 0)[:, None]
+        x = _dec_embed(cfg, params, tokens, qpos, compute_dtype)
+        x, new_cache = _paged_dec_backbone(cfg, params, x, block_tables,
+                                           qpos, wvalid, cache)
+        w_out = (params["embed"].T if cfg.tie_embeddings
+                 else params["lm_head"])
+        logits = (x[:, 0, :] @ w_out.astype(compute_dtype)
+                  ).astype(jnp.float32)
+        vocab_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        return jnp.where(vocab_ok, logits, L.NEG_INF), new_cache
+
+    return decode_step
 
 
 def make_decode_step(cfg: ModelConfig, knobs, tp: int):

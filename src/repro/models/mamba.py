@@ -131,9 +131,12 @@ def ssm_apply(p, x, cfg, initial_state=None, return_state=False):
     A = -jnp.exp(p["A_log"])                                     # (h,)
 
     xh = xs.reshape(B, S, h, hp).astype(jnp.float32)
-    chunk = min(cfg.ssm_chunk, S)
+    # FIXED inner chunk, never shrunk to S: exp(a)·exp(b) != exp(a+b)
+    # bitwise, so the chunked scan only composes exactly across engine
+    # chunk boundaries when the inner ssd chunk grid is anchored at
+    # position 0 globally (ssd_chunked identity-pads ragged tails)
     y, final = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
-                           Cm.astype(jnp.float32), chunk,
+                           Cm.astype(jnp.float32), cfg.ssm_chunk,
                            initial_state=initial_state)
     y = y + xh * p["D"][None, None, :, None]
     y = y.reshape(B, S, di).astype(cd)
@@ -152,6 +155,67 @@ def ssm_apply(p, x, cfg, initial_state=None, return_state=False):
             zxbc_raw, ((0, 0), (k - 1 - S, 0), (0, 0)))
         return out, {"conv": conv_state.astype(cd), "ssm": final}
     return out
+
+
+def ssm_apply_chunk(p, x, cfg, state, n_valid):
+    """Chunk-resumed SSD block: one engine prefill chunk, bit-exact with
+    the matching slice of :func:`ssm_apply` over the whole prompt.
+
+    x (B, C, d) — the chunk's hidden states (tail rows may be padding);
+    state — the carried-state pytree {conv (B, k-1, conv_dim) raw
+    pre-activation xbc rows of the valid prefix, ssm (B, h, p, n)} from
+    the previous chunk (all-zero at position 0 — identical to the
+    monolithic left zero-pad / zero initial state); n_valid (B,) — valid
+    rows in this chunk. Returns (out (B, C, d), new state).
+
+    Exactness requires the caller to split prompts at multiples of
+    ``cfg.ssm_chunk`` (the engine's ``chunk_multiple`` capability): the
+    inner ssd chunk grid then lands on the same global boundaries as the
+    monolithic scan, so every decay product is the same float sequence.
+    """
+    B, C, d = x.shape
+    di, n, h, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    cd = x.dtype
+    k = cfg.ssm_conv
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cd))
+    z, xbc_raw, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    valid = (jnp.arange(C)[None, :] < n_valid[:, None])          # (B, C)
+
+    # conv with the carried window as left context (zeros at position 0
+    # == the monolithic zero pad; same unrolled-adds order as
+    # _causal_conv so the first chunk is bit-identical)
+    window = jnp.concatenate([state["conv"].astype(cd), xbc_raw], axis=1)
+    w = p["conv_w"].astype(cd)
+    xbc = sum(window[:, i:i + C, :] * w[i] for i in range(k))
+    xbc = jax.nn.silu(xbc + p["conv_b"].astype(cd))
+    xs, Bm, Cm = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    # softplus is always > 0: padding rows must be masked explicitly so
+    # they are exact no-ops on the state (decay exp(0)=1, contribution 0)
+    dt = jnp.where(valid[..., None], dt, 0.0)                    # (B,C,h)
+    A = -jnp.exp(p["A_log"])
+
+    xh = xs.reshape(B, C, h, hp).astype(jnp.float32)
+    y, final = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                           Cm.astype(jnp.float32), cfg.ssm_chunk,
+                           initial_state=state["ssm"])
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, C, di).astype(cd)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * lax.rsqrt(var + 1e-5) * p["gate_norm"].astype(jnp.float32)
+         ).astype(cd)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+
+    # new conv state: the k-1 raw rows ending at the last VALID position
+    # (window index n_valid-1 is absolute position pos0+n_valid-1); for
+    # an all-padding row (n_valid == 0) this reproduces the old state
+    idx = n_valid[:, None] + jnp.arange(k - 1)[None, :]          # (B, k-1)
+    new_conv = jnp.take_along_axis(window, idx[..., None], axis=1)
+    return out, {"conv": new_conv.astype(state["conv"].dtype), "ssm": final}
 
 
 def ssm_decode_step(p, x1, state, cfg):

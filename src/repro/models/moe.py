@@ -97,3 +97,41 @@ def moe_apply(p, x, cfg):
     aux = {"moe_lb_loss": jnp.mean(lb), "moe_z_loss": jnp.mean(zl),
            "moe_dropped": jnp.mean(dr)}
     return out.reshape(B, S, d), aux
+
+
+def moe_apply_dropless(p, x, cfg):
+    """Serve-time routing: per-token top-k with no capacity coupling.
+
+    Every token independently picks its top-k experts and combines their
+    outputs under renormalized gates — no grouping, no position-in-expert
+    queue, no capacity drops — so a token's output is a function of that
+    token's hidden state alone. That is the chunk-parity property the
+    continuous engine needs: splitting a prompt at any chunk boundary, or
+    batching it with any set of neighbours, cannot change its routing.
+
+    Capacity-vs-parity tradeoff: without the capacity bound every expert
+    runs on every token (the combine zero-weights the non-selected ones),
+    costing num_experts/top_k x the grouped FLOPs and giving up the
+    (G, E, C) all-to-all layout. Serving pays that for token-identical
+    chunked prefill; training keeps :func:`moe_apply` for the
+    capacity-bounded, load-balanced (aux-loss) regime.
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    flat = x.reshape(B * S, d)
+    logits = jnp.einsum("td,de->te", flat.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gate_vals, idx = jax.lax.top_k(probs, K)                     # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)             # renormalize
+    weights = jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32)
+                      * gate_vals[..., None], axis=1)            # (T, E)
+    cd = x.dtype
+    g = jnp.einsum("td,edf->tef", flat, p["w_gate"].astype(cd))
+    u = jnp.einsum("td,edf->tef", flat, p["w_up"].astype(cd))
+    h = jax.nn.silu(g) * u
+    out_e = jnp.einsum("tef,efd->ted", h, p["w_down"].astype(cd))
+    out = jnp.einsum("te,ted->td", weights.astype(cd), out_e)
+    aux = {"moe_lb_loss": jnp.zeros(()), "moe_z_loss": jnp.zeros(()),
+           "moe_dropped": jnp.zeros(())}
+    return out.reshape(B, S, d), aux

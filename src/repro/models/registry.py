@@ -13,10 +13,58 @@ from typing import Any, Callable, Dict, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.config import (BLOCK_DENSE, ModelConfig, ShapeConfig,
-                          TrainConfig, ServeConfig)
+from repro.config import (BLOCK_HYBRID, BLOCK_SSM, ModelConfig,
+                          ShapeConfig, TrainConfig, ServeConfig)
 from repro.models import encdec, transformer
 from repro.models.layers import dtype_of
+
+
+class Capabilities(NamedTuple):
+    """Structural serving capabilities of a model family (DESIGN.md §13).
+
+    Derived from the config's block/frontend structure — never from model
+    names or comments — and consumed by the continuous engine, scheduler
+    pricing, and fabric placement. ``reason`` documents, for anything
+    False, *why* the structure forbids it; engines raise it verbatim so
+    an operator sees the capability gap, not a silent degradation."""
+    chunked_prefill: bool = True    # fixed-shape chunk-streamed prompts
+    paged_decode: bool = True       # block-table KV pool serving
+    slot_chunk: bool = True         # per-request slot-cache chunk path
+    carried_state: bool = False     # non-KV per-request state pytree
+    state_leaves: tuple = ()        # cache leaf names of that state
+    prefix_cache: bool = True       # radix-tree KV block reuse
+    kv_migration: bool = True       # p2p block migration (disagg fabric)
+    encoder_prechunk: bool = False  # enc-dec: encoder pass at admission
+    chunk_multiple: int = 1         # prefill chunk must divide by this
+    reason: str = ""
+
+
+def derive_capabilities(cfg: ModelConfig) -> Capabilities:
+    """Map config structure to serving capabilities."""
+    if cfg.frontend == "patch_stub":
+        return Capabilities(
+            chunked_prefill=False, paged_decode=False, slot_chunk=False,
+            prefix_cache=False, kv_migration=False,
+            reason="patch_stub modality frontend prepends frontend tokens "
+                   "that have no chunked/paged deposit path")
+    if cfg.is_encoder_decoder:
+        return Capabilities(
+            slot_chunk=False, carried_state=True,
+            state_leaves=("cross_k", "cross_v"),
+            prefix_cache=False, kv_migration=False, encoder_prechunk=True,
+            reason="carried cross-attention state is per-request, not in "
+                   "KV blocks: prefix caching and KV-block migration "
+                   "would silently drop it")
+    if cfg.block in (BLOCK_SSM, BLOCK_HYBRID):
+        return Capabilities(
+            carried_state=True, state_leaves=("conv", "ssm"),
+            prefix_cache=False, kv_migration=False,
+            chunk_multiple=cfg.ssm_chunk,
+            reason="recurrent carried state is per-request, not in KV "
+                   "blocks: prefix caching and KV-block migration would "
+                   "silently drop it; chunk boundaries must fall on "
+                   "ssm_chunk multiples for bit-exact scan resume")
+    return Capabilities()
 
 
 class Model(NamedTuple):
@@ -28,18 +76,21 @@ class Model(NamedTuple):
     init_cache: Callable[..., Any]
     knobs: Dict[str, Any]
     tp: int
-    # fixed-shape incremental prefill (chunked prompt deposit) — None for
-    # families that must prefill monolithically (SSM/hybrid state threading,
-    # modality frontends, encoder-decoder)
+    # fixed-shape incremental prefill (chunked prompt deposit) over the
+    # per-request slot cache — None only when capabilities.slot_chunk is
+    # False (enc-dec chunks on the paged path only; patch_stub cannot)
     prefill_chunk: Any = None
-    # paged KV (block-table) serving paths — None for families without a
-    # parity-safe chunked deposit (the paged engine always streams prompts
-    # chunk-by-chunk) or with non-attention decode state to page
+    # paged KV (block-table) serving paths — None only when
+    # capabilities.paged_decode is False
     init_paged_cache: Any = None
     decode_step_paged: Any = None
     prefill_chunk_paged: Any = None
     # copy-on-write block clone for the radix prefix cache (paged only)
     clone_paged_block: Any = None
+    # enc-dec only: encoder pass as a fixed pre-chunk at admission
+    encode_prechunk: Any = None
+    # structural serving capabilities (always set; see derive_capabilities)
+    capabilities: Capabilities = Capabilities()
 
 
 def _knobs(train: TrainConfig, serve: ServeConfig,
@@ -66,6 +117,8 @@ def build_model(cfg: ModelConfig, train: TrainConfig = None,
     knobs = _knobs(train, serve, act_sharding, attn_sharding)
     pdt = dtype_of(train.param_dtype)
 
+    caps = derive_capabilities(cfg)
+
     if cfg.is_encoder_decoder:
         init = lambda key: encdec.init_encdec_params(cfg, key, pdt)
         return Model(
@@ -77,14 +130,21 @@ def build_model(cfg: ModelConfig, train: TrainConfig = None,
             init_cache=lambda batch, cache_len, dtype=None: (
                 encdec.init_encdec_cache(cfg, batch, cache_len, tp,
                                          dtype or dtype_of(knobs["compute_dtype"]))),
-            knobs=knobs, tp=tp)
+            knobs=knobs, tp=tp,
+            init_paged_cache=(
+                lambda num_blocks, block_size, dtype=None, num_rows=0:
+                encdec.init_paged_cache(
+                    cfg, num_blocks, block_size, tp,
+                    dtype or dtype_of(knobs["compute_dtype"]),
+                    num_rows=num_rows)),
+            decode_step_paged=encdec.make_decode_step_paged(cfg, knobs, tp),
+            prefill_chunk_paged=encdec.make_prefill_chunk_paged(
+                cfg, knobs, tp),
+            encode_prechunk=encdec.make_encode_prechunk(cfg, knobs, tp),
+            capabilities=caps)
 
     init = lambda key: transformer.init_lm_params(cfg, key, pdt)
-    # dense attention only: MoE's capacity-limited routing is grouped over
-    # the routed sequence, so per-chunk routing (and padded rows competing
-    # for expert capacity) would not be token-identical to monolithic
-    # prefill; SSM/hybrid need state threading; frontends prepend tokens
-    chunkable = cfg.block == BLOCK_DENSE and cfg.frontend == "none"
+    paged = caps.paged_decode
     return Model(
         cfg=cfg,
         init=init,
@@ -96,20 +156,22 @@ def build_model(cfg: ModelConfig, train: TrainConfig = None,
                                    dtype or dtype_of(knobs["compute_dtype"]))),
         knobs=knobs, tp=tp,
         prefill_chunk=(transformer.make_prefill_chunk(cfg, knobs, tp)
-                       if chunkable else None),
+                       if caps.slot_chunk else None),
         init_paged_cache=(
-            (lambda num_blocks, block_size, dtype=None:
+            (lambda num_blocks, block_size, dtype=None, num_rows=0:
              transformer.init_paged_cache(
                  cfg, num_blocks, block_size, tp,
-                 dtype or dtype_of(knobs["compute_dtype"])))
-            if chunkable else None),
+                 dtype or dtype_of(knobs["compute_dtype"]),
+                 num_rows=num_rows))
+            if paged else None),
         decode_step_paged=(transformer.make_decode_step_paged(cfg, knobs, tp)
-                           if chunkable else None),
+                           if paged else None),
         prefill_chunk_paged=(
             transformer.make_prefill_chunk_paged(cfg, knobs, tp)
-            if chunkable else None),
+            if paged else None),
         clone_paged_block=(transformer.make_clone_block(cfg, knobs, tp)
-                           if chunkable else None))
+                           if paged and caps.prefix_cache else None),
+        capabilities=caps)
 
 
 # ---------------------------------------------------------------------------

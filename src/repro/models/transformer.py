@@ -138,8 +138,13 @@ def _attn_branch(cfg, p, xn, positions, is_global, knobs,
 
 
 def block_forward(cfg, p, x, positions, is_global, knobs, *,
-                  collect_cache=False, cache_heads=0, collect_state=False):
-    """One block, full-sequence. Returns (x, aux, cache)."""
+                  collect_cache=False, cache_heads=0, collect_state=False,
+                  dropless_moe=False):
+    """One block, full-sequence. Returns (x, aux, cache).
+
+    ``dropless_moe`` selects the serve-time per-token routing
+    (:func:`moe.moe_apply_dropless`) — parity-safe under any chunking —
+    over training's capacity-bounded grouped routing."""
     aux: Dict[str, Any] = {}
     cache: Dict[str, Any] = {}
     xn = L.apply_norm(x, p["ln1"], cfg)
@@ -174,8 +179,8 @@ def block_forward(cfg, p, x, positions, is_global, knobs, *,
     if cfg.block in (BLOCK_DENSE, BLOCK_HYBRID):
         x = x + L.mlp_apply(p["mlp"], L.apply_norm(x, p["ln2"], cfg), cfg)
     elif cfg.block == BLOCK_MOE:
-        m_out, m_aux = moe.moe_apply(p["moe"], L.apply_norm(x, p["ln2"], cfg),
-                                     cfg)
+        moe_fn = moe.moe_apply_dropless if dropless_moe else moe.moe_apply
+        m_out, m_aux = moe_fn(p["moe"], L.apply_norm(x, p["ln2"], cfg), cfg)
         x = x + m_out
         aux.update(m_aux)
     return x, aux, cache
@@ -193,7 +198,8 @@ def embed_tokens(cfg, params, tokens, compute_dtype):
 
 
 def backbone(cfg, params, x, positions, knobs, *, collect_cache=False,
-             cache_heads=0, collect_state=False, remat=True):
+             cache_heads=0, collect_state=False, remat=True,
+             dropless_moe=False):
     """Scan blocks over stacked params. x (B,S,d) -> (hidden, aux, caches)."""
     flags = layer_flags(cfg)
 
@@ -203,7 +209,7 @@ def backbone(cfg, params, x, positions, knobs, *, collect_cache=False,
         h, aux, cache = block_forward(
             cfg, p_l, h, positions, flag, knobs,
             collect_cache=collect_cache, cache_heads=cache_heads,
-            collect_state=collect_state)
+            collect_state=collect_state, dropless_moe=dropless_moe)
         h = L.constrain(h, knobs.get("act_sharding"))
         return h, (aux, cache)
 
@@ -316,7 +322,7 @@ def make_prefill(cfg: ModelConfig, knobs, tp: int):
         hidden, _, caches = backbone(
             cfg, params, x, positions, knobs, collect_cache=True,
             cache_heads=cache_heads, collect_state=True,
-            remat=knobs["remat"])
+            remat=knobs["remat"], dropless_moe=True)
         # place collected kv into fixed-capacity cache buffers
         B = x.shape[0]
         cache = init_cache(cfg, B, cache_len, tp, compute_dtype)
@@ -439,18 +445,29 @@ def make_decode_step(cfg: ModelConfig, knobs, tp: int):
             cache_l = _layer_slice(cch, idx)
             new_cache: Dict[str, Any] = {}
             xn = L.apply_norm(h, p_l["ln1"], cfg)
+
+            def ssm_guarded(p_l, cache_l):
+                # parked slots (pos < 0) must keep their carried state: a
+                # slot mid-chunked-prefill is parked between chunk
+                # deposits while live slots decode, and an unguarded
+                # update would overwrite the partially-deposited scan
+                # state with a garbage-token step (attention is naturally
+                # guarded — its parked write slot drops out of range)
+                state = {"conv": cache_l["conv"], "ssm": cache_l["ssm"]}
+                out, st = mamba.ssm_decode_step(p_l["ssm"], xn, state, cfg)
+                st = {k: jnp.where(pos >= 0, v.astype(state[k].dtype),
+                                   state[k])
+                      for k, v in st.items()}
+                return out, st
+
             if cfg.block == BLOCK_SSM:
-                out, st = mamba.ssm_decode_step(
-                    p_l["ssm"], xn, {"conv": cache_l["conv"],
-                                     "ssm": cache_l["ssm"]}, cfg)
+                out, st = ssm_guarded(p_l, cache_l)
                 h = h + out
                 new_cache.update(st)
             elif cfg.block == BLOCK_HYBRID:
                 a_out, a_cache = _decode_attn(cfg, p_l["attn"], xn, cache_l,
                                               pos, flag, tp)
-                s_out, st = mamba.ssm_decode_step(
-                    p_l["ssm"], xn, {"conv": cache_l["conv"],
-                                     "ssm": cache_l["ssm"]}, cfg)
+                s_out, st = ssm_guarded(p_l, cache_l)
                 a_out = L.rmsnorm(a_out, p_l["attn_out_norm"], eps=cfg.norm_eps)
                 s_out = L.rmsnorm(s_out, p_l["ssm_out_norm"], eps=cfg.norm_eps)
                 h = h + 0.5 * (a_out + s_out)
@@ -465,8 +482,8 @@ def make_decode_step(cfg: ModelConfig, knobs, tp: int):
                 h = h + L.mlp_apply(p_l["mlp"],
                                     L.apply_norm(h, p_l["ln2"], cfg), cfg)
             elif cfg.block == BLOCK_MOE:
-                m_out, _ = moe.moe_apply(p_l["moe"],
-                                         L.apply_norm(h, p_l["ln2"], cfg), cfg)
+                m_out, _ = moe.moe_apply_dropless(
+                    p_l["moe"], L.apply_norm(h, p_l["ln2"], cfg), cfg)
                 h = h + m_out
             return (h, _layer_put(cch, new_cache, idx)), None
 
@@ -491,20 +508,35 @@ def make_decode_step(cfg: ModelConfig, knobs, tp: int):
 # ---------------------------------------------------------------------------
 
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
-                     tp: int, compute_dtype):
-    """Global KV block pool: (L, P, bs, Gs, hd) per k/v. One block table
-    entry maps a request's token range [i*bs, (i+1)*bs) onto a pool
-    block shared across all layers, so positions are structural — no
-    per-token position array is stored (the slot cache needs one for its
-    ring addressing; the paged cache does not)."""
-    if cfg.block != BLOCK_DENSE or cfg.frontend != "none":
-        raise ValueError("paged KV supports dense attention blocks without "
-                         f"a modality frontend (got block={cfg.block!r}, "
-                         f"frontend={cfg.frontend!r})")
-    gs = kv_store_heads(cfg, tp)
-    shape = (cfg.num_layers, num_blocks, block_size, gs, cfg.head_dim)
-    return {"k": jnp.zeros(shape, compute_dtype),
-            "v": jnp.zeros(shape, compute_dtype)}
+                     tp: int, compute_dtype, num_rows: int = 0):
+    """Global KV block pool + per-row carried state.
+
+    k/v are (L, P, bs, Gs, hd): one block table entry maps a request's
+    token range [i*bs, (i+1)*bs) onto a pool block shared across all
+    layers, so positions are structural — no per-token position array is
+    stored (the slot cache needs one for its ring addressing; the paged
+    cache does not). Recurrent carried state (SSM conv/ssm leaves) is NOT
+    block-addressable — it is one fixed-size pytree per *request row* —
+    so those leaves are (L, num_rows, ...), row-aligned with the engine's
+    request rows and threaded through the chunk/decode steps explicitly
+    (DESIGN.md §13)."""
+    if cfg.frontend == "patch_stub":
+        raise ValueError("paged KV does not support the patch_stub "
+                         "modality frontend (prepended frontend tokens "
+                         "have no block-table deposit path)")
+    c: Dict[str, Any] = {}
+    if cfg.uses_attention:
+        gs = kv_store_heads(cfg, tp)
+        shape = (cfg.num_layers, num_blocks, block_size, gs, cfg.head_dim)
+        c["k"] = jnp.zeros(shape, compute_dtype)
+        c["v"] = jnp.zeros(shape, compute_dtype)
+    if cfg.block in (BLOCK_SSM, BLOCK_HYBRID):
+        Lc, di, n = cfg.num_layers, cfg.ssm_d_inner, cfg.ssm_state
+        c["conv"] = jnp.zeros((Lc, num_rows, cfg.ssm_conv - 1, di + 2 * n),
+                              compute_dtype)
+        c["ssm"] = jnp.zeros((Lc, num_rows, cfg.ssm_heads, cfg.ssm_head_dim,
+                              n), jnp.float32)
+    return c
 
 
 def _paged_attn(cfg, p, xn, layer_cache, tables, qpos, wvalid, is_global):
@@ -554,21 +586,77 @@ def _paged_attn(cfg, p, xn, layer_cache, tables, qpos, wvalid, is_global):
     return out, {"k": new_k, "v": new_v}
 
 
-def _paged_backbone(cfg, params, x, tables, qpos, wvalid, cache, flags):
-    """Scan the dense blocks over the paged pool (cache rides the scan
-    carry exactly like :func:`make_decode_step` — XLA aliases the donated
-    pool end-to-end)."""
+def _paged_backbone(cfg, params, x, tables, qpos, wvalid, cache, flags, *,
+                    mode="decode", rows=None, pos0=None, n_valid=None):
+    """Scan the blocks over the paged pool (cache rides the scan carry
+    exactly like :func:`make_decode_step` — XLA aliases the donated pool
+    end-to-end). KV goes through block tables; carried state (conv/ssm)
+    is row-aligned: ``mode="decode"`` updates it full-width in place
+    (parked rows keep their state via a ``where`` select), ``mode="chunk"``
+    gathers the prefilling subset at ``rows`` and scatters the advanced
+    state back with a drop-mode write (padding rows aim at the
+    out-of-range row)."""
+    B = x.shape[0]
+
+    def ssm_step(p_l, cache_l, xn):
+        state = {"conv": cache_l["conv"], "ssm": cache_l["ssm"]}
+        if mode == "decode":
+            out, st = mamba.ssm_decode_step(p_l["ssm"], xn, state, cfg)
+            live = qpos[:, 0] >= 0
+            st = {k: jnp.where(live.reshape((B,) + (1,) * (v.ndim - 1)),
+                               v, state[k].astype(v.dtype)).astype(
+                                   state[k].dtype)
+                  for k, v in st.items()}
+            return out, st
+        # chunk: gather the carried state of the prefilling rows (clip:
+        # padding rows read row 0 and their writes drop), zero it at the
+        # first chunk of a prompt (a ``where`` select, not a multiply, so
+        # a stale row's garbage can never leak into a fresh prompt)
+        gathered = {k: jnp.take(v, rows, axis=0, mode="clip")
+                    for k, v in state.items()}
+        fresh = pos0 == 0
+        gathered = {k: jnp.where(
+            fresh.reshape((rows.shape[0],) + (1,) * (v.ndim - 1)),
+            jnp.zeros_like(v), v) for k, v in gathered.items()}
+        out, st = mamba.ssm_apply_chunk(p_l["ssm"], xn, cfg, gathered,
+                                        n_valid)
+        st = {k: state[k].at[rows].set(v.astype(state[k].dtype),
+                                       mode="drop")
+              for k, v in st.items()}
+        return out, st
+
     def body(carry, xs):
         h, cch = carry
         p_l, flag, idx = xs
         cache_l = _layer_slice(cch, idx)
+        new_cache: Dict[str, Any] = {}
         xn = L.apply_norm(h, p_l["ln1"], cfg)
-        a_out, a_cache = _paged_attn(cfg, p_l["attn"], xn, cache_l,
-                                     tables, qpos, wvalid, flag)
-        h = h + a_out
-        h = h + L.mlp_apply(p_l["mlp"],
-                            L.apply_norm(h, p_l["ln2"], cfg), cfg)
-        return (h, _layer_put(cch, a_cache, idx)), None
+        if cfg.block == BLOCK_SSM:
+            out, st = ssm_step(p_l, cache_l, xn)
+            h = h + out
+            new_cache.update(st)
+        elif cfg.block == BLOCK_HYBRID:
+            a_out, a_cache = _paged_attn(cfg, p_l["attn"], xn, cache_l,
+                                         tables, qpos, wvalid, flag)
+            s_out, st = ssm_step(p_l, cache_l, xn)
+            a_out = L.rmsnorm(a_out, p_l["attn_out_norm"], eps=cfg.norm_eps)
+            s_out = L.rmsnorm(s_out, p_l["ssm_out_norm"], eps=cfg.norm_eps)
+            h = h + 0.5 * (a_out + s_out)
+            new_cache.update(a_cache)
+            new_cache.update(st)
+        else:
+            a_out, a_cache = _paged_attn(cfg, p_l["attn"], xn, cache_l,
+                                         tables, qpos, wvalid, flag)
+            h = h + a_out
+            new_cache.update(a_cache)
+        if cfg.block in (BLOCK_DENSE, BLOCK_HYBRID):
+            h = h + L.mlp_apply(p_l["mlp"],
+                                L.apply_norm(h, p_l["ln2"], cfg), cfg)
+        elif cfg.block == BLOCK_MOE:
+            m_out, _ = moe.moe_apply_dropless(
+                p_l["moe"], L.apply_norm(h, p_l["ln2"], cfg), cfg)
+            h = h + m_out
+        return (h, _layer_put(cch, new_cache, idx)), None
 
     (x, new_cache), _ = lax.scan(
         body, (x, cache),
@@ -607,19 +695,25 @@ def make_prefill_chunk_paged(cfg: ModelConfig, knobs, tp: int):
     pool (no gather/scatter of slot rows — the block table IS the
     indirection). Padding rows carry an all ``-1`` table and
     ``n_valid == 0``: every write drops, and their logits are garbage the
-    engine aims at its drop row."""
+    engine aims at its drop row. ``rows`` carries each chunk-row's engine
+    request-row index so recurrent carried state (SSM/hybrid) resumes
+    from — and advances — the right (L, num_rows, ...) state row; padding
+    rows aim at the out-of-range row index and their state writes drop
+    (DESIGN.md §13)."""
     compute_dtype = L.dtype_of(knobs["compute_dtype"])
     flags = layer_flags(cfg)
 
-    def prefill_chunk(params, cache, tokens, block_tables, pos0, n_valid):
-        """tokens (B,C) int32; block_tables (B,NB); pos0, n_valid (B,)
-        -> (last-valid-position logits (B,Vp), cache)."""
+    def prefill_chunk(params, cache, tokens, block_tables, rows, pos0,
+                      n_valid):
+        """tokens (B,C) int32; block_tables (B,NB); rows, pos0, n_valid
+        (B,) -> (last-valid-position logits (B,Vp), cache)."""
         B, C = tokens.shape
         x = embed_tokens(cfg, params, tokens, compute_dtype)
         qpos = pos0[:, None] + jnp.arange(C)[None, :]
         wvalid = jnp.arange(C)[None, :] < n_valid[:, None]
         x, new_cache = _paged_backbone(cfg, params, x, block_tables, qpos,
-                                       wvalid, cache, flags)
+                                       wvalid, cache, flags, mode="chunk",
+                                       rows=rows, pos0=pos0, n_valid=n_valid)
         last = jnp.clip(n_valid - 1, 0, C - 1)
         hidden = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
         w_out = lm_head_weight(cfg, params).astype(compute_dtype)
@@ -680,13 +774,16 @@ def make_prefill_chunk(cfg: ModelConfig, knobs, tp: int):
     queries. Returns the logits at the last *valid* position (only
     meaningful on the final chunk of a prompt) plus the updated cache.
 
-    Supported for decoder-only *dense* attention blocks without a
-    modality frontend. MoE routing is capacity-limited over the routed
-    group, so per-chunk routing (with padded rows competing for expert
-    capacity) would not be token-identical to monolithic prefill;
-    SSM/hybrid blocks need state threading and frontends prepend tokens —
-    all of those stay on the monolithic prefill path (the registry
-    exposes ``prefill_chunk=None`` for them).
+    Supported for every decoder-only block family without a modality
+    frontend. Dense attention deposits KV; SSM/hybrid thread their
+    recurrent carried state (conv window + SSM state, living in the same
+    per-request cache pytree) through :func:`mamba.ssm_apply_chunk`, so a
+    prompt split at any ``cfg.ssm_chunk`` multiple resumes the scan
+    bit-exactly; MoE routes per-token (:func:`moe.moe_apply_dropless`) so
+    chunk boundaries cannot change routing (DESIGN.md §13). Only the
+    patch_stub modality frontend stays monolithic — its prepended
+    frontend tokens have no chunk deposit path (the registry exposes
+    ``prefill_chunk=None`` and the capability flags name the reason).
     """
     compute_dtype = L.dtype_of(knobs["compute_dtype"])
     flags = layer_flags(cfg)
@@ -699,17 +796,51 @@ def make_prefill_chunk(cfg: ModelConfig, knobs, tp: int):
         qpos = pos0 + jnp.arange(C)
         valid = jnp.arange(C) < n_valid
 
+        def ssm_chunk(p_l, cache_l, xn):
+            # carried state rides the per-request cache; a first chunk
+            # (pos0 == 0) starts from zeros via a select, so a recycled
+            # slot's stale state can never leak into a fresh prompt
+            state = {"conv": cache_l["conv"], "ssm": cache_l["ssm"]}
+            state = {k: jnp.where(pos0 == 0, jnp.zeros_like(v), v)
+                     for k, v in state.items()}
+            out, st = mamba.ssm_apply_chunk(
+                p_l["ssm"], xn, cfg, state, jnp.asarray(n_valid).reshape(1))
+            return out, st
+
         def body(carry, xs):
             h, cch = carry
             p_l, flag, idx = xs
             cache_l = _layer_slice(cch, idx)
+            new_cache: Dict[str, Any] = {}
             xn = L.apply_norm(h, p_l["ln1"], cfg)
-            a_out, a_cache = _chunk_attn(cfg, p_l["attn"], xn, cache_l,
-                                         qpos, valid, flag)
-            h = h + a_out
-            h = h + L.mlp_apply(p_l["mlp"],
-                                L.apply_norm(h, p_l["ln2"], cfg), cfg)
-            return (h, _layer_put(cch, a_cache, idx)), None
+            if cfg.block == BLOCK_SSM:
+                out, st = ssm_chunk(p_l, cache_l, xn)
+                h = h + out
+                new_cache.update(st)
+            elif cfg.block == BLOCK_HYBRID:
+                a_out, a_cache = _chunk_attn(cfg, p_l["attn"], xn, cache_l,
+                                             qpos, valid, flag)
+                s_out, st = ssm_chunk(p_l, cache_l, xn)
+                a_out = L.rmsnorm(a_out, p_l["attn_out_norm"],
+                                  eps=cfg.norm_eps)
+                s_out = L.rmsnorm(s_out, p_l["ssm_out_norm"],
+                                  eps=cfg.norm_eps)
+                h = h + 0.5 * (a_out + s_out)
+                new_cache.update(a_cache)
+                new_cache.update(st)
+            else:
+                a_out, a_cache = _chunk_attn(cfg, p_l["attn"], xn, cache_l,
+                                             qpos, valid, flag)
+                h = h + a_out
+                new_cache.update(a_cache)
+            if cfg.block in (BLOCK_DENSE, BLOCK_HYBRID):
+                h = h + L.mlp_apply(p_l["mlp"],
+                                    L.apply_norm(h, p_l["ln2"], cfg), cfg)
+            elif cfg.block == BLOCK_MOE:
+                m_out, _ = moe.moe_apply_dropless(
+                    p_l["moe"], L.apply_norm(h, p_l["ln2"], cfg), cfg)
+                h = h + m_out
+            return (h, _layer_put(cch, new_cache, idx)), None
 
         (x, new_cache), _ = lax.scan(
             body, (x, cache),

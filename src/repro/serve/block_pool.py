@@ -203,7 +203,11 @@ class PagedKVCache:
         self.block_size = int(block_size)
         self.max_blocks_per_req = int(max_blocks_per_req)
         self.pool = BlockPool(num_blocks, block_size)
-        self._buf = model.init_paged_cache(num_blocks, block_size)
+        # num_rows sizes the row-aligned carried-state leaves (SSM
+        # conv/ssm, enc-dec cross K/V) that ride in the same pytree as
+        # the block-addressed k/v pool (DESIGN.md §13)
+        self._buf = model.init_paged_cache(num_blocks, block_size,
+                                           num_rows=num_slots)
         self._tables = np.full((num_slots, max_blocks_per_req), -1, np.int32)
         self._tables_dev = None       # host->device copy, built on demand
         self._free_rows: List[int] = list(range(num_slots - 1, -1, -1))

@@ -34,9 +34,14 @@ steps (no prefill head-of-line blocking), and because the chunk jit's
 shapes never change, prefill compiles O(1) XLA programs however many
 distinct prompt lengths the traffic carries — versus one compile per
 distinct length on the monolithic path (``prefill_chunk=0``), which
-stays available as the baseline and as the fallback for model families
-without a parity-safe chunk step (SSM/hybrid state, capacity-limited
-MoE routing, modality frontends, enc-dec).
+stays available as an explicit baseline. Every registry family runs the
+chunked path (DESIGN.md §13): SSM/hybrid thread recurrent carried state
+through the chunk steps, MoE routes per-token (dropless), and enc-dec
+runs its encoder as a fixed pre-chunk on the paged layout. The engine
+consults the model's structural capability flags
+(``registry.derive_capabilities``) and *raises* naming the missing
+capability when a path is unsupported (patch_stub frontends; enc-dec on
+the slot layout) — never a silent monolithic fallback.
 
 Threadcomm integration:
 
@@ -226,18 +231,55 @@ class ContinuousEngine:
         self.eos_id = eos_id
         self.max_prefill_per_step = max(1, int(max_prefill_per_step))
         self.kv_layout = kv_layout
-        # chunked prompt deposit needs the model's fixed-shape chunk step;
-        # families without a parity-safe one (SSM/hybrid, MoE routing,
-        # frontends, enc-dec) fall back to monolithic prefill
-        self.prefill_chunk = (min(int(prefill_chunk), int(cache_len))
-                              if (prefill_chunk
-                                  and getattr(model, "prefill_chunk", None)
-                                  is not None) else 0)
+        #: structural serving capabilities (registry.derive_capabilities);
+        #: None for bare stub models, which are treated as fully capable
+        self.capabilities = caps = getattr(model, "capabilities", None)
+        # chunked prompt deposit: every registry family chunks (state
+        # threading for SSM/hybrid, dropless MoE routing, enc-dec via the
+        # paged decoder path — DESIGN.md §13). A family that STILL can't
+        # (patch_stub frontend; enc-dec on the slot layout) raises here,
+        # naming the missing capability — never a silent monolithic
+        # fallback (pass prefill_chunk=0 to choose monolithic explicitly).
+        chunk = int(prefill_chunk) if prefill_chunk else 0
+        if chunk:
+            has_chunk = (getattr(model, "prefill_chunk_paged", None)
+                         if kv_layout == "paged"
+                         else getattr(model, "prefill_chunk", None))
+            if has_chunk is None:
+                missing = ("chunked_prefill"
+                           if caps is None or not caps.chunked_prefill
+                           else "slot_chunk")
+                hint = (" — this family chunks on the paged path only; "
+                        "use kv_layout='paged'"
+                        if caps is not None and caps.chunked_prefill
+                        and kv_layout == "slot" else "")
+                why = (f" ({caps.reason})"
+                       if caps is not None and caps.reason else "")
+                raise ValueError(
+                    f"model lacks capability {missing!r} for chunked "
+                    f"prefill on the {kv_layout} layout{hint}{why}; pass "
+                    "prefill_chunk=0 for explicit monolithic prefill")
+            chunk = min(chunk, int(cache_len))
+            mult = int(caps.chunk_multiple) if caps is not None else 1
+            if mult > 1:
+                # recurrent families resume bit-exactly only when chunk
+                # boundaries fall on ssm_chunk multiples: clamp down
+                chunk = (chunk // mult) * mult
+                if chunk == 0:
+                    raise ValueError(
+                        f"prefill_chunk={prefill_chunk} (after the "
+                        f"cache_len={cache_len} clamp) is below this "
+                        f"family's chunk_multiple={mult}; chunk boundaries "
+                        f"must fall on multiples of {mult} for bit-exact "
+                        "recurrent-state resume")
+        self.prefill_chunk = chunk
         if kv_layout == "paged":
             if getattr(model, "decode_step_paged", None) is None:
+                why = (f": {caps.reason}"
+                       if caps is not None and caps.reason else "")
                 raise ValueError(
-                    "paged KV needs the model's block-table decode path "
-                    "(dense attention, no frontend) — this arch has none")
+                    "model lacks capability 'paged_decode' — no "
+                    f"block-table paged decode path{why}")
             if not self.prefill_chunk:
                 raise ValueError("paged KV deposits prompts chunk-by-chunk;"
                                  " prefill_chunk must be > 0")
@@ -264,6 +306,9 @@ class ContinuousEngine:
                 raise ValueError("prefix caching is not supported on "
                                  "disaggregated prefill/decode ranks "
                                  "(migrated blocks leave the local pool)")
+            if caps is not None and not caps.prefix_cache:
+                raise ValueError("model lacks capability 'prefix_cache': "
+                                 + caps.reason)
             if getattr(model, "clone_paged_block", None) is None:
                 raise ValueError("prefix caching needs the model's "
                                  "copy-on-write block clone "
@@ -277,7 +322,8 @@ class ContinuousEngine:
             num_cells=4 * num_slots,
             prefill_chunk_bytes=4 * self.prefill_chunk,
             block_bytes=(4 * int(block_size)
-                         if kv_layout == "paged" else 0))
+                         if kv_layout == "paged" else 0),
+            state_bytes=self._carried_state_bytes())
         if comm is not None:
             self._prefill_stream = comm.stream("prefill")
             self._decode_stream = comm.stream("decode")
@@ -305,6 +351,13 @@ class ContinuousEngine:
 
         self._prefill = jax.jit(_prefill_traced)
         self._decode = jax.jit(_decode_traced, donate_argnums=(1, 2))
+        # enc-dec: the encoder pass as a fixed pre-chunk at admission —
+        # installs the request's per-layer cross K/V carried state into
+        # its cache row before the decoder chunk stream starts
+        enc = getattr(model, "encode_prechunk", None)
+        self._encode = (jax.jit(enc, donate_argnums=(1,))
+                        if enc is not None and kv_layout == "paged"
+                        else None)
         self._admit_state = jax.jit(self._admit_impl, donate_argnums=(0,))
         self._park_state = jax.jit(self._park_impl, donate_argnums=(0,))
         self._import_state = jax.jit(self._import_state_impl,
@@ -353,6 +406,18 @@ class ContinuousEngine:
         self.prefix_prompt_tokens = 0
         self.prefill_dispatches_saved = 0
         self.prefix_cow_clones = 0
+
+    def _carried_state_bytes(self) -> int:
+        """Per-request bytes of carried (non-KV) state — the scheduler
+        prices this one extra interthread handoff per admission (the
+        state row travels with the request, unlike pool-resident KV)."""
+        caps = self.capabilities
+        if caps is None or not caps.carried_state:
+            return 0
+        buf = self.kv.buffers
+        total = sum(int(buf[name].nbytes) for name in caps.state_leaves
+                    if isinstance(buf, dict) and name in buf)
+        return total // max(1, self.kv.num_slots)
 
     @staticmethod
     def _fresh_state(S: int):
@@ -491,11 +556,13 @@ class ContinuousEngine:
         P chunk-rows write straight into the shared pool (the table IS
         the indirection — no slot-row gather/scatter), then the shared
         finalize tail. Padding rows carry an all ``-1`` table (writes
-        drop) and ``rows == num_slots`` (state installs drop)."""
+        drop) and ``rows == num_slots`` (state installs drop — for both
+        the sampling state and the model's carried recurrent state, which
+        the chunk step gathers/scatters at the same row indices)."""
         def fn(params, buf, state, tokens, rows, tables, pos0, n_valid,
                fin_pos, keys, temps):
             logits, buf = model.prefill_chunk_paged(
-                params, buf, tokens, tables, pos0, n_valid)
+                params, buf, tokens, tables, rows, pos0, n_valid)
             state, tok0 = cls._install_finalized_rows(
                 state, logits, rows, fin_pos, keys, temps, num_slots)
             return buf, state, tok0
@@ -682,6 +749,14 @@ class ContinuousEngine:
                 slot, resident = self._admit_with_prefix(req)
             else:
                 slot = self.kv.alloc(req, self._token_budget(req))
+            if self._encode is not None:
+                # enc-dec: the fixed encoder pre-chunk — install this
+                # request's cross K/V carried state into its row before
+                # the decoder prompt starts streaming
+                buf = self._encode(self.params, self.kv.buffers,
+                                   jnp.asarray(req.batch["frames"]),
+                                   jnp.full((1,), slot, jnp.int32))
+                self.kv.swap_buffers(self._prefill_stream.ordered(buf))
         else:
             slot = self.kv.alloc(req)
             self.kv.reset_slot(slot)   # stale pages must not alias history

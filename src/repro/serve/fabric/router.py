@@ -74,6 +74,19 @@ class ServingFabric:
         roles = self.placement.roles(ranks)
         self.ranks = int(ranks)
 
+        # capability gate (DESIGN.md §13): disaggregation migrates KV
+        # blocks between ranks, which silently strands any per-request
+        # carried state (SSM/hybrid recurrent state, enc-dec cross K/V)
+        # at the prefill rank — refuse up front, naming the capability
+        caps = getattr(model, "capabilities", None)
+        if (self.placement.needs_migration and caps is not None
+                and not caps.kv_migration):
+            raise ValueError(
+                "model lacks capability 'kv_migration' — disaggregated "
+                "placement migrates KV blocks between ranks, which would "
+                "strand per-request carried state at the prefill rank: "
+                + caps.reason)
+
         # -- substrate: root threadcomm + per-rank derived contexts --
         if comm is None:
             mesh = make_mesh((jax.local_device_count(),), ("serve",))
@@ -86,11 +99,6 @@ class ServingFabric:
         self.comm = comm
         subs = self._engine_comms(comm, ranks)
 
-        # -- the dispatch hop's admission queue (router rank) --
-        self.scheduler = CellQueueScheduler(
-            num_cells=4 * ranks * slots_per_rank,
-            prefill_chunk_bytes=4 * prefill_chunk,
-            block_bytes=4 * block_size)
         #: JSQ backpressure: a rank above this load receives no new
         #: dispatches; excess requests wait in the router's cell queue
         #: (the bounded-buffer discipline of paper §3.2, one hop up)
@@ -107,6 +115,16 @@ class ServingFabric:
                 kv_layout="paged", block_size=block_size,
                 num_blocks=blocks_per_rank, role=role)
             self.workers.append(EngineWorker(i, role, eng, comm=subs[i]))
+
+        # -- the dispatch hop's admission queue (router rank) --
+        # built after the engines so carried-state families price the
+        # per-admission state handoff at this hop too (same surcharge
+        # the per-rank engine schedulers apply)
+        self.scheduler = CellQueueScheduler(
+            num_cells=4 * ranks * slots_per_rank,
+            prefill_chunk_bytes=4 * prefill_chunk,
+            block_bytes=4 * block_size,
+            state_bytes=self.workers[0].engine._carried_state_bytes())
 
         self.transport = (KVBlockTransport(comm)
                           if self.placement.needs_migration else None)

@@ -108,7 +108,7 @@ class CellQueueScheduler:
     def __init__(self, num_cells: int = 16,
                  cell_size: int = protocol.DEFAULT_CELL_SIZE,
                  itemsize: int = 4, prefill_chunk_bytes: int = 0,
-                 block_bytes: int = 0):
+                 block_bytes: int = 0, state_bytes: int = 0):
         if num_cells < 1:
             raise ValueError("need at least one cell")
         self.num_cells = int(num_cells)
@@ -124,6 +124,16 @@ class CellQueueScheduler:
         # >0: the deposit target is a paged pool — chunked prompts pay the
         # per-block table surcharge on top of the chunked handoff
         self.block_bytes = int(block_bytes)
+        # >0: the model carries per-request non-KV state (SSM/hybrid
+        # recurrent state, enc-dec cross K/V — capabilities.carried_state)
+        # of this many bytes per slot; each admission pays one extra
+        # interthread handoff for installing/zeroing it. Priced once per
+        # admission in _classify, NOT in _price, so reprice_prefix's
+        # miss-suffix repricing can never double-count it.
+        self.state_bytes = int(state_bytes)
+        self._state_cost_s = (
+            protocol.interthread_latency(self.state_bytes, self.host_model)
+            if self.state_bytes > 0 else 0.0)
         self.cells_free = int(num_cells)
         self._cellq: Deque[ServeRequest] = deque()      # buffered (eager)
         self._overflow: Deque[ServeRequest] = deque()   # eager, pool full
@@ -194,6 +204,9 @@ class CellQueueScheduler:
         req.protocol = protocol.select_protocol(
             req.nbytes, interthread=True, cell=self.cell_size)
         req.admit_cost_s = self._price(req.nbytes, req.protocol)
+        # carried-state handoff surcharge: one per admission, flat in the
+        # prompt length (the state pytree has fixed per-slot shape)
+        req.admit_cost_s += self._state_cost_s
         req.cells = (max(1, math.ceil(req.nbytes / self.cell_size))
                      if req.protocol in EAGER_CLASS else 0)
         self.modeled_admit_cost_s += req.admit_cost_s
@@ -219,6 +232,10 @@ class CellQueueScheduler:
             hit_bytes, bb, self.host_model, cow_blocks=cow_blocks)
         if miss_bytes > 0:
             new_cost += self._price(miss_bytes, req.protocol)
+        # carried state is installed regardless of how much prompt the
+        # prefix cache served (unreachable today — carried-state families
+        # have prefix_cache=False — but the invariant is cheap to keep)
+        new_cost += self._state_cost_s
         self.modeled_admit_cost_s += new_cost - req.admit_cost_s
         self.modeled_prefix_hit_cost_s += new_cost
         self.n_prefix_hits += 1
@@ -252,7 +269,8 @@ class CellQueueScheduler:
             # instead of reporting an eager-priced row that rendezvoused
             self.modeled_admit_cost_s -= req.admit_cost_s
             req.protocol = "one_copy"
-            req.admit_cost_s = self._price(req.nbytes, "one_copy")
+            req.admit_cost_s = (self._price(req.nbytes, "one_copy")
+                                + self._state_cost_s)
             self.modeled_admit_cost_s += req.admit_cost_s
         req.cells = 0
         self._rendezvous.append(req)

@@ -69,6 +69,66 @@ def test_scatter_drop_disabled():
 
 
 # ---------------------------------------------------------------------------
+# state-thread
+# ---------------------------------------------------------------------------
+
+# the index is innocuously named ("idx"), so scatter-drop does NOT see
+# it — the carried-state TARGET (conv/ssm leaves) is what puts the
+# write in scope for state-thread (DESIGN.md §13)
+STATE_BAD = """
+    def scatter_state(cache, idx, new_conv):
+        return cache["conv"].at[idx].set(new_conv)
+"""
+
+STATE_BAD_ATTR = """
+    def scatter_state(state, idx, v):
+        return state.ssm.at[idx].add(v)
+"""
+
+STATE_GOOD = """
+    def scatter_state(cache, idx, new_conv):
+        return cache["conv"].at[idx].set(new_conv, mode="drop")
+"""
+
+STATE_UNRELATED_TARGET = """
+    def scatter(x, idx, v):
+        return x.at[idx].set(v)
+"""
+
+
+def test_state_thread_positive_dict_leaf():
+    assert _rules_hit(STATE_BAD) == ["state-thread"]
+
+
+def test_state_thread_positive_attribute_leaf():
+    assert _rules_hit(STATE_BAD_ATTR) == ["state-thread"]
+
+
+def test_state_thread_negative_drop_mode():
+    assert _rules_hit(STATE_GOOD) == []
+
+
+def test_state_thread_ignores_unrelated_targets():
+    assert _rules_hit(STATE_UNRELATED_TARGET) == []
+
+
+def test_state_thread_disabled():
+    assert _rules_hit(STATE_BAD, rules=_other_rules("state-thread")) == []
+
+
+def test_state_thread_and_scatter_drop_complement():
+    # a state leaf scattered through a slot-named index trips BOTH
+    # rules without drop mode, and neither with it
+    src = """
+    def scatter(cache, slots, v):
+        return cache["ssm"].at[slots].set(v)
+    """
+    assert _rules_hit(src) == ["scatter-drop", "state-thread"]
+    fixed = src.replace(".set(v)", '.set(v, mode="drop")')
+    assert _rules_hit(fixed) == []
+
+
+# ---------------------------------------------------------------------------
 # donated-use
 # ---------------------------------------------------------------------------
 
@@ -322,9 +382,9 @@ def test_syntax_error_is_a_finding():
 
 
 def test_rule_registry_complete():
-    assert set(RULES_BY_NAME) == {"scatter-drop", "donated-use",
-                                  "request-leak", "stream-order",
-                                  "host-sync"}
+    assert set(RULES_BY_NAME) == {"scatter-drop", "state-thread",
+                                  "donated-use", "request-leak",
+                                  "stream-order", "host-sync"}
 
 
 # ---------------------------------------------------------------------------

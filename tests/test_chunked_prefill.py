@@ -69,22 +69,53 @@ def test_chunked_parity_fewer_slots_than_requests():
     assert np.array_equal(static, cont)
 
 
-def test_non_dense_families_fall_back_to_monolithic():
-    """Families without a parity-safe fixed-shape chunk step (SSM state
-    threading, capacity-limited MoE routing) keep the monolithic path
-    even when chunking is requested."""
+def test_non_dense_families_chunk_with_parity():
+    """State-threaded chunk contract (DESIGN.md §13): SSM and MoE
+    families run the chunked slot path token-identically to the static
+    monolithic baseline — the old silent fallback is gone."""
     cfg, model, params = _bundle("mamba2-370m")
-    assert model.prefill_chunk is None
+    assert model.prefill_chunk is not None
+    assert model.capabilities.carried_state
     eng = _cont(model, params, cache_len=16, num_slots=2, chunk=8)
-    assert eng.prefill_chunk == 0
+    assert eng.prefill_chunk == 8
     prompt = _prompt(cfg, B=2, S=8)
     static = StaticEngine(model, params, cache_len=16).generate(prompt, 6)
     assert np.array_equal(static, eng.generate(prompt, 6))
-    # MoE: per-chunk expert-capacity competition would break parity
-    _, moe_model, moe_params = _bundle("olmoe-1b-7b")
-    assert moe_model.prefill_chunk is None
-    assert _cont(moe_model, moe_params, cache_len=16, num_slots=2,
-                 chunk=8).prefill_chunk == 0
+    # MoE routes per-token (dropless) on every serving path, so chunk
+    # boundaries cannot shift expert-capacity competition
+    moe_cfg, moe_model, moe_params = _bundle("olmoe-1b-7b")
+    assert moe_model.prefill_chunk is not None
+    moe_eng = _cont(moe_model, moe_params, cache_len=16, num_slots=2,
+                    chunk=8)
+    assert moe_eng.prefill_chunk == 8
+    moe_prompt = _prompt(moe_cfg, B=2, S=8)
+    moe_static = StaticEngine(moe_model, moe_params,
+                              cache_len=16).generate(moe_prompt, 6)
+    assert np.array_equal(moe_static, moe_eng.generate(moe_prompt, 6))
+
+
+def test_chunk_floored_to_family_multiple():
+    """SSM/hybrid chunk sizes are floored to ssm_chunk multiples (scan
+    resume is bit-exact only on the fixed inner grid); a chunk smaller
+    than one multiple raises naming the constraint."""
+    _, model, params = _bundle("mamba2-370m")
+    m = model.capabilities.chunk_multiple
+    eng = _cont(model, params, cache_len=4 * m, num_slots=2,
+                chunk=m + m // 2)
+    assert eng.prefill_chunk == m
+    with pytest.raises(ValueError, match="chunk_multiple"):
+        _cont(model, params, cache_len=4 * m, num_slots=2, chunk=m - 1)
+
+
+def test_unchunkable_family_raises_naming_capability():
+    """patch_stub frontends cannot chunk: requesting chunked prefill
+    raises naming the missing capability instead of silently running
+    monolithic (explicit monolithic via chunk=0 still works)."""
+    _, model, params = _bundle("internvl2-76b")
+    with pytest.raises(ValueError, match="chunked_prefill"):
+        _cont(model, params, cache_len=16, num_slots=2, chunk=8)
+    eng = _cont(model, params, cache_len=16, num_slots=2, chunk=0)
+    assert eng.prefill_chunk == 0
 
 
 # ---------------------------------------------------------------------------

@@ -280,7 +280,7 @@ def test_fabric_reset_back_to_back_trials(bundle):
 
 class _StubModel:
     @staticmethod
-    def init_paged_cache(num_blocks, block_size):
+    def init_paged_cache(num_blocks, block_size, num_rows=0):
         shape = (2, num_blocks, block_size, 1, 2)
         return {"k": jnp.zeros(shape, jnp.float32),
                 "v": jnp.zeros(shape, jnp.float32)}

@@ -272,3 +272,50 @@ def test_ssd_scan_matches_model_chunked():
     np.testing.assert_allclose(np.asarray(kern),
                                np.asarray(y_model.transpose(0, 2, 1, 3)),
                                atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_scan_state_threading_resumes_bit_exact():
+    """Splitting a sequence across two kernel calls and threading the
+    final state into the second call reproduces the single-call outputs
+    BIT-EXACTLY (same chunk grid on both sides — the state-threaded
+    chunked-prefill contract, DESIGN.md §13)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    B, H, S, p, n, chunk = 2, 3, 64, 16, 8, 16
+    half = S // 2
+    x = jax.random.normal(ks[0], (B, H, S, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, H, S))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, n)) * 0.5
+
+    y_full, s_full = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                              return_state=True)
+    y1, s1 = ssd_scan(x[:, :, :half], dt[:, :, :half], A, Bm[:, :half],
+                      Cm[:, :half], chunk=chunk, return_state=True)
+    y2, s2 = ssd_scan(x[:, :, half:], dt[:, :, half:], A, Bm[:, half:],
+                      Cm[:, half:], s1, chunk=chunk, return_state=True)
+    np.testing.assert_array_equal(np.asarray(y_full[:, :, :half]),
+                                  np.asarray(y1))
+    np.testing.assert_array_equal(np.asarray(y_full[:, :, half:]),
+                                  np.asarray(y2))
+    np.testing.assert_array_equal(np.asarray(s_full), np.asarray(s2))
+
+
+def test_ssd_scan_state_threading_matches_ref():
+    """Kernel carried state agrees with the sequential-recurrence oracle's
+    (same initial_state/return_state contract on both)."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 6)
+    B, H, S, p, n = 1, 2, 32, 8, 4
+    x = jax.random.normal(ks[0], (B, H, S, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, H, S))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, n)) * 0.5
+    s0 = jax.random.normal(ks[5], (B, H, p, n)) * 0.2
+
+    y_k, f_k = ssd_scan(x, dt, A, Bm, Cm, s0, chunk=8, return_state=True)
+    y_r, f_r = ssd_scan_ref(x, dt, A, Bm, Cm, s0, return_state=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_r),
+                               atol=1e-4, rtol=1e-4)

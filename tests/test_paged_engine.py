@@ -73,7 +73,8 @@ def test_pool_misuse_errors_name_owner():
 
 class _StubModel:
     @staticmethod
-    def init_paged_cache(num_blocks, block_size, dtype=None):
+    def init_paged_cache(num_blocks, block_size, dtype=None,
+                        num_rows=0):
         return {"k": np.zeros((1, num_blocks, block_size, 1, 1)),
                 "v": np.zeros((1, num_blocks, block_size, 1, 1))}
 
@@ -237,15 +238,25 @@ def test_paged_oversized_request_rejected_at_submit():
         small.submit(req2)
 
 
-def test_paged_requires_chunked_deposit_and_dense_path():
+def test_paged_requires_chunked_deposit():
     cfg, model, params = _bundle()
     with pytest.raises(ValueError, match="chunk"):
         ContinuousEngine(model, params, cache_len=24, num_slots=2,
                          prefill_chunk=0, kv_layout="paged")
-    _, mamba_model, mamba_params = _bundle("mamba2-370m")
-    with pytest.raises(ValueError, match="paged"):
-        ContinuousEngine(mamba_model, mamba_params, cache_len=24,
-                         num_slots=2, kv_layout="paged")
+
+
+def test_paged_ssm_family_runs_with_parity():
+    """SSM families run the paged path (carried state threaded through
+    row-aligned pool leaves — DESIGN.md §13) token-identically to the
+    static baseline; the old dense-only gate is gone."""
+    cfg, mamba_model, mamba_params = _bundle("mamba2-370m")
+    prompt = _prompt(cfg, B=2, S=8)
+    static = StaticEngine(mamba_model, mamba_params,
+                          cache_len=24).generate(prompt, 6)
+    eng = ContinuousEngine(mamba_model, mamba_params, cache_len=24,
+                           num_slots=2, prefill_chunk=8,
+                           kv_layout="paged", block_size=4)
+    assert np.array_equal(static, eng.generate(prompt, 6))
 
 
 def test_paged_temperature_determinism():

@@ -328,7 +328,7 @@ def test_double_free_message_without_sanitizer(no_san):
 
 class _StubModel:
     @staticmethod
-    def init_paged_cache(num_blocks, block_size):
+    def init_paged_cache(num_blocks, block_size, num_rows=0):
         shape = (2, num_blocks, block_size, 1, 2)
         return {"k": jnp.zeros(shape, jnp.float32),
                 "v": jnp.zeros(shape, jnp.float32)}

@@ -40,6 +40,11 @@ def rows(fast: bool = False) -> Iterator[Row]:
                f"p95_ms={m['latency_p95_s']*1e3:.1f}{ttft}")
 
     rep = res["fabric_replicated"]
+    for p in ("replicated", "disagg"):
+        spd = res[f"speedup_vs_single_{p}"]
+        yield (f"serve_fabric_speedup_vs_single_{p}", spd,
+               f"fabric_{p} tok_s / single-engine tok_s on the same "
+               f"trace; beats_single={spd > 1.0}")
     yield ("serve_fabric_replicated_identity", 0.0,
            f"token_identical={res['fabric_token_identical_replicated']} "
            f"(N={res['ranks']} JSQ replicas vs single engine, greedy "

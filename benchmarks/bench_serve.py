@@ -82,6 +82,17 @@ def rows(fast: bool = False) -> Iterator[Row]:
                f"equal HBM; verified_more_concurrent="
                f"{res['paged_more_concurrent_verified']} hbm_within_budget="
                f"{res['paged_hbm_within_budget']}")
+    if "spec_tok_s" in res:
+        yield ("serve_spec_tok_s", res["spec_tok_s"],
+               f"speculate_k={res['speculate_k']:.0f} "
+               f"draft={res['draft_arch']} vs non-spec "
+               f"{res['continuous_tok_s']:.1f} tok/s; token_identical="
+               f"{res['spec_token_identical_trace']}")
+        yield ("serve_spec_accepted_per_dispatch",
+               res["spec_accepted_per_dispatch"],
+               f"tokens emitted per verify dispatch (acceptance_rate="
+               f"{res['spec_acceptance_rate']:.3f}); >1 means the fused "
+               f"k-token verify amortized its dispatch")
     if "prefix_hit_rate" in res:
         pfx = res["prefix"]
         yield ("serve_prefix_hit_rate", res["prefix_hit_rate"],

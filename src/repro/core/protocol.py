@@ -167,6 +167,38 @@ def kv_migration_latency(nbytes: int, block_bytes: int,
     return cost
 
 
+def speculative_verify_latency(k: int, token_bytes: int = 4,
+                               m: HostModel = HostModel()) -> float:
+    """Price of one draft–verify round of speculative decoding
+    (DESIGN.md §14): the drafter hands its k proposed tokens to the
+    target's verify stream, the target runs ONE fused (k+1)-query
+    dispatch (each teacher-forced token is its own envelope — the
+    dispatch is one message batch, not k+1 handshakes), and the accepted
+    prefix travels back to the drafter so it can resync.
+
+    Three legs, all interthread (drafter and target are threads of one
+    serving process, so payloads move at shared-address-space cost):
+
+      1. draft handoff — k token ids, priced by the protocol their size
+         selects (always eager_fast at practical k);
+      2. verify dispatch — one handshake to claim the verify stream plus
+         an envelope and payload-copy per teacher-forced token (k drafts
+         + the current token);
+      3. acceptance return — up to k+1 accepted token ids back.
+
+    The round replaces up to k+1 single-token decode dispatches, each of
+    which would have paid its own envelope — the model prices exactly the
+    messaging the fusion saves, which is what the scheduler's
+    ``spec_modeled_cost_s`` accounting aggregates."""
+    if k < 1:
+        raise ValueError("speculative_verify_latency: k must be >= 1")
+    draft_handoff = interthread_latency(k * token_bytes, m)
+    verify = (m.t_handshake + (k + 1) * m.t_envelope
+              + (k + 1) * token_bytes / m.bw_copy)
+    accept_return = interthread_latency((k + 1) * token_bytes, m)
+    return draft_handoff + verify + accept_return
+
+
 def interprocess_latency(nbytes: int, m: HostModel = HostModel()) -> float:
     """MPI-everywhere shared-memory messaging (eager / rndv, always 2-copy)."""
     if nbytes <= EAGER_THRESHOLD_INTERPROCESS:

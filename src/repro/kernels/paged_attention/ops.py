@@ -2,8 +2,11 @@
 
 The serving engine holds decode queries as (B, 1, H, hd) rows and the
 block pool as (P, bs, Gs, hd); the kernel wants the squeezed (B, H, hd)
-query. On TPU set interpret=False; interpret=True executes the kernel
-body in python on CPU for validation (this container).
+query. A (B, K, H, hd) query with K > 1 is a speculative-verify q-block
+(query j at absolute position ``lengths[b] - K + j``) and dispatches the
+multi-query kernel, returning (B, K, H, hd). On TPU set interpret=False;
+interpret=True executes the kernel body in python on CPU for validation
+(this container).
 """
 
 from __future__ import annotations
@@ -21,11 +24,11 @@ from repro.kernels.paged_attention.paged_attention import paged_attention_fwd
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
                     window: int = 0, softcap: float = 0.0,
                     interpret: bool = True):
-    """q: (B, H, hd) or (B, 1, H, hd); k_pages, v_pages: (P, bs, Hkv, hd);
-    block_tables: (B, NB) int32; lengths: (B,) int32 -> same rank as q."""
-    squeezed = q.ndim == 4
+    """q: (B, H, hd), (B, 1, H, hd), or (B, K, H, hd) with K > 1 (q-block
+    verify); k_pages, v_pages: (P, bs, Hkv, hd); block_tables: (B, NB)
+    int32; lengths: (B,) int32 -> same rank as q."""
+    squeezed = q.ndim == 4 and q.shape[1] == 1
     if squeezed:
-        assert q.shape[1] == 1, q.shape
         q = q[:, 0]
     out = paged_attention_fwd(q, k_pages, v_pages,
                               jnp.asarray(block_tables, jnp.int32),

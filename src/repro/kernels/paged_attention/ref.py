@@ -15,18 +15,23 @@ NEG_INF = -1e30
 
 def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
                         window: int = 0, softcap: float = 0.0):
-    """Single-token decode attention through per-request block tables.
+    """Decode attention through per-request block tables.
 
     q: (B, H, hd) — one query per request, the token at absolute position
-    ``lengths[b] - 1`` (its own k/v is already resident in the pages).
+    ``lengths[b] - 1`` (its own k/v is already resident in the pages) —
+    or (B, K, H, hd) — a q-block of K queries, query ``j`` at absolute
+    position ``lengths[b] - K + j`` with causality inside the block.
     k_pages, v_pages: (P, bs, Hkv, hd) — the global KV block pool; block
     ``p`` of a request's table holds its tokens ``[i*bs, (i+1)*bs)`` where
     ``i`` is the table index mapping to ``p``.
     block_tables: (B, NB) int32, ``-1`` marks absent table entries.
     lengths: (B,) int32, valid resident tokens per request (>= 1).
-    Returns (B, H, hd).
+    Returns the same rank as q.
     """
-    B, H, hd = q.shape
+    multi = q.ndim == 4
+    if not multi:
+        q = q[:, None]
+    B, K, H, hd = q.shape
     P, bs, Hkv, _ = k_pages.shape
     NB = block_tables.shape[1]
     if Hkv != H:
@@ -38,17 +43,19 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
     kg = kg.reshape(B, NB * bs, H, hd)
     vg = vg.reshape(B, NB * bs, H, hd)
 
-    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+    s = jnp.einsum("bqhd,bthd->bqht", q.astype(jnp.float32),
                    kg.astype(jnp.float32)) / math.sqrt(hd)
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
-    tok = jnp.arange(NB * bs)[None, :]                       # abs position
-    ok = tok < lengths[:, None]
-    ok &= jnp.repeat(block_tables >= 0, bs, axis=1)
+    tok = jnp.arange(NB * bs)[None, None, :]                 # abs position
+    qpos = (lengths[:, None] - K + jnp.arange(K)[None, :])[:, :, None]
+    ok = tok <= qpos                                         # causal in-block
+    ok &= jnp.repeat(block_tables >= 0, bs, axis=1)[:, None, :]
     if window > 0:
-        ok &= tok > (lengths[:, None] - 1) - window
-    s = jnp.where(ok[:, None, :], s, NEG_INF)
+        ok &= tok > qpos - window
+    s = jnp.where(ok[:, :, None, :], s, NEG_INF)
     p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
     p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
-    return jnp.einsum("bht,bthd->bhd", p, vg.astype(jnp.float32)
-                      ).astype(q.dtype)
+    out = jnp.einsum("bqht,bthd->bqhd", p, vg.astype(jnp.float32)
+                     ).astype(q.dtype)
+    return out if multi else out[:, 0]

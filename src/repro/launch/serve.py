@@ -329,9 +329,14 @@ def run_fabric(arch: str = "gemma-2b", *, smoke: bool = True,
                                b.output[:b.generated])
                 for a, b in zip(base_reqs, reqs)))
             result[f"fabric_token_identical_{placement}"] = ident
-            result[f"fabric_{placement}"]["speedup_vs_single"] = (
-                result[f"fabric_{placement}"]["tok_s"]
-                / result["single"]["tok_s"])
+            spd = (result[f"fabric_{placement}"]["tok_s"]
+                   / result["single"]["tok_s"])
+            result[f"fabric_{placement}"]["speedup_vs_single"] = spd
+            # first-class comparison key: N ranks must beat one rank of
+            # the same size — the number CI gates on (a fabric that
+            # loses to its own single-engine baseline is a routing or
+            # placement regression, not a measurement detail)
+            result[f"speedup_vs_single_{placement}"] = spd
         finally:
             fab.close()
     return result
@@ -342,7 +347,7 @@ def run_family_rows(archs=FAMILY_ARCHS, *, smoke: bool = True,
                     prompt_len: int = 24, max_new: int = 4,
                     prefill_chunk: int = 16, block_size: int = 8,
                     eos_id: int = -1, seed: int = 0) -> List[Dict]:
-    """Per-family serving rows (``--config``, schema v6): drive a small
+    """Per-family serving rows (``--config``, schema v7): drive a small
     same-arrival trace through each family's continuous *paged* chunked
     engine and report ``continuous_tok_s`` plus token identity against
     the family's static monolithic baseline. One row per registry
@@ -362,7 +367,8 @@ def run_family_rows(archs=FAMILY_ARCHS, *, smoke: bool = True,
                      "paged_decode": bool(caps.paged_decode),
                      "carried_state": bool(caps.carried_state),
                      "prefix_cache": bool(caps.prefix_cache),
-                     "kv_migration": bool(caps.kv_migration)}
+                     "kv_migration": bool(caps.kv_migration),
+                     "speculative": bool(caps.speculative)}
         chunk = effective_chunk(caps, prefill_chunk)
         if not (chunk and caps.paged_decode):
             row["skipped"] = caps.reason
@@ -410,7 +416,8 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
                 chunk_compare: bool = True, paged_compare: bool = True,
                 block_size: int = 16, prefix_compare: bool = True,
                 shared_prefix_len: int = 0,
-                share_ratio: float = 0.9) -> Dict:
+                share_ratio: float = 0.9, spec_compare: bool = True,
+                speculate: int = 3, draft_arch: str = "self") -> Dict:
     """Build the model once, warm the jits, then drive the trace through
     the requested engine(s). Returns the full measurement dict.
 
@@ -441,6 +448,16 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
     repeat-tenant shape). All three must be token-identical; the warm
     pass's hit rate, prefill work saved, and TTFT improvement land as
     top-level keys (DESIGN.md §12).
+
+    With ``spec_compare`` (greedy traces on a speculative-capable arch)
+    the same trace runs once more through a paged engine with
+    ``speculate=k`` draft–verify rounds (DESIGN.md §14):
+    ``draft_arch="self"`` self-speculates (the target drafts on a second
+    pool — full machinery, near-1.0 acceptance), any other name builds
+    that config as the drafter. The result records ``spec_tok_s``
+    alongside the non-speculative paged run's throughput, per-dispatch
+    acceptance, and trace-level token identity — speculation must not
+    change one greedy token (schema v7).
     """
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     dtype = "float32" if smoke else "bfloat16"
@@ -478,7 +495,8 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
         if k != "labels"}
 
     def _drive_continuous(chunk: int, kv_layout: str = "slot",
-                          num_blocks=None, n_rows=None):
+                          num_blocks=None, n_rows=None, speculate=0,
+                          draft_model=None, draft_params=None):
         # the engine's default scheduler prices admissions with the
         # engine's own (cache_len-clamped) chunk size
         eng = ContinuousEngine(
@@ -486,7 +504,8 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
             eos_id=eos_id, prefill_chunk=chunk,
             max_prefill_per_step=max_prefill_per_step,
             kv_layout=kv_layout, block_size=block_size,
-            num_blocks=num_blocks)
+            num_blocks=num_blocks, speculate=speculate,
+            draft_model=draft_model, draft_params=draft_params)
         # warm the jits on ONE prompt shape off the clock, then reset the
         # engine — warm requests must leave neither stale device slot
         # state nor accounting rows behind
@@ -502,6 +521,10 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
             eng.prefill_compiles - warm_compiles)
         stats.update(eng.kv_accounting())
         stats["block_deferrals"] = float(eng.scheduler.n_block_deferrals)
+        if speculate:
+            stats.update(eng.spec_stats())
+            stats["decode_tokens_per_dispatch"] = \
+                eng.decode_tokens_per_dispatch
         return stats, reqs
 
     if engine in ("continuous", "both"):
@@ -549,6 +572,44 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
                 p["kv_bytes_per_resident_token"]
             result["slot_bytes_per_resident_token"] = \
                 c["kv_bytes_per_resident_token"]
+
+        if (prefill_chunk and spec_compare and speculate > 0
+                and temperature == 0.0
+                and model.verify_step_paged is not None):
+            # speculative run over the SAME trace and paged pool
+            # geometry as the non-spec paged comparison: k-token
+            # draft–verify rounds, greedy parity required token-for-
+            # token (DESIGN.md §14). Skipped (never faked) on sampled
+            # traces and on families without the 'speculative'
+            # capability.
+            draft_model = draft_params = None
+            if draft_arch not in ("self", arch):
+                dcfg = (get_smoke_config(draft_arch) if smoke
+                        else get_config(draft_arch))
+                draft_model = build_model(dcfg, tcfg, scfg, tp=1)
+                draft_params = draft_model.init(jax.random.PRNGKey(seed))
+            nblocks = max(1, (slots * cache_len) // block_size)
+            rows = min(requests, nblocks)
+            result["continuous_spec"], spec_reqs = _drive_continuous(
+                prefill_chunk, kv_layout="paged", num_blocks=nblocks,
+                n_rows=rows, speculate=speculate,
+                draft_model=draft_model, draft_params=draft_params)
+            sp = result["continuous_spec"]
+            ref = result.get("continuous_paged")
+            ref_reqs = paged_reqs if ref is not None else slot_reqs
+            if ref is None:
+                ref = result["continuous"]
+            result["speculate_k"] = speculate
+            result["draft_arch"] = draft_arch
+            result["spec_tok_s"] = sp["tok_s"]
+            result["continuous_tok_s"] = ref["tok_s"]
+            result["spec_accepted_per_dispatch"] = \
+                sp["accepted_per_dispatch"]
+            result["spec_acceptance_rate"] = sp["acceptance_rate"]
+            result["spec_token_identical_trace"] = bool(all(
+                np.array_equal(a.output[:a.generated],
+                               b.output[:b.generated])
+                for a, b in zip(ref_reqs, spec_reqs)))
 
         if (prefill_chunk and prefix_compare
                 and model.decode_step_paged is not None
@@ -711,6 +772,15 @@ def main():
     ap.add_argument("--share-ratio", type=float, default=0.9,
                     help="fraction of prefix-compare requests drawn from "
                          "a shared template family")
+    ap.add_argument("--speculate", type=int, default=3,
+                    help="draft tokens per draft-verify round for the "
+                         "speculative comparison run (0 = off)")
+    ap.add_argument("--draft-arch", default="self",
+                    help="drafter config for the speculative run; 'self' "
+                         "= self-speculation (the target drafts on its "
+                         "own second pool)")
+    ap.add_argument("--no-spec-compare", action="store_true",
+                    help="skip the speculative-decoding comparison run")
     ap.add_argument("--fabric", default="off",
                     choices=["off", "replicated", "disagg", "both"],
                     help="run the multi-rank serving fabric comparison "
@@ -759,7 +829,7 @@ def main():
                   f"state_bytes/slot {row['state_bytes_per_slot']}  "
                   f"token_identical={row['static_tok_identical']}")
         if args.json:
-            payload = {"schema": "repro-serve-bench-v6", "families": rows}
+            payload = {"schema": "repro-serve-bench-v7", "families": rows}
             with open(args.json, "w") as f:
                 json.dump(payload, f, indent=1)
             print(f"wrote {args.json}")
@@ -807,7 +877,9 @@ def main():
                       f"modeled")
         for p in result["placements"]:
             print(f"   token_identical[{p}]="
-                  f"{result.get(f'fabric_token_identical_{p}')}")
+                  f"{result.get(f'fabric_token_identical_{p}')}  "
+                  f"speedup_vs_single[{p}]="
+                  f"{result.get(f'speedup_vs_single_{p}', 0.0):.2f}x")
         if args.json:
             payload = {"schema": "repro-serve-bench-v4", **result}
             with open(args.json, "w") as f:
@@ -828,14 +900,16 @@ def main():
         block_size=args.kv_block_size,
         prefix_compare=not args.no_prefix_compare,
         shared_prefix_len=args.shared_prefix_len,
-        share_ratio=args.share_ratio)
+        share_ratio=args.share_ratio,
+        spec_compare=not args.no_spec_compare,
+        speculate=args.speculate, draft_arch=args.draft_arch)
 
     print(f"arch={result['arch']} requests={result['requests']} "
           f"slots={result['slots']} cache_len={result['cache_len']} "
           f"prompt_len={result['prompt_len']} "
           f"prefill_chunk={result['prefill_chunk']}")
     for name in ("static", "continuous_monolithic", "continuous",
-                 "continuous_paged"):
+                 "continuous_paged", "continuous_spec"):
         if name in result:
             m = result[name]
             ttft = (f"  ttft_p95 {m['ttft_p95_s'] * 1e3:.0f}ms"
@@ -865,6 +939,15 @@ def main():
               f"bytes/resident-tok {result['paged_bytes_per_resident_token']:.0f}"
               f" vs {result['slot_bytes_per_resident_token']:.0f}, "
               f"token_identical={result['paged_token_identical_trace']})")
+    if "spec_tok_s" in result:
+        print(f"       spec: k={result['speculate_k']} "
+              f"(draft={result['draft_arch']})  "
+              f"{result['spec_tok_s']:.1f} tok/s vs "
+              f"{result['continuous_tok_s']:.1f} non-spec  "
+              f"accepted/dispatch "
+              f"{result['spec_accepted_per_dispatch']:.2f}  "
+              f"acceptance {result['spec_acceptance_rate']:.3f}  "
+              f"token_identical={result['spec_token_identical_trace']}")
     if "prefix" in result:
         pfx = result["prefix"]
         warm_ttft = pfx["warm"].get("ttft_p95_s", 0.0)
@@ -884,7 +967,7 @@ def main():
               f"paged={result.get('parity_token_identical_paged')} "
               f"(prompt_len={result.get('parity_prompt_len')})")
     if args.json:
-        payload = {"schema": "repro-serve-bench-v6", **result}
+        payload = {"schema": "repro-serve-bench-v7", **result}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"wrote {args.json}")

@@ -36,6 +36,7 @@ class Capabilities(NamedTuple):
     kv_migration: bool = True       # p2p block migration (disagg fabric)
     encoder_prechunk: bool = False  # enc-dec: encoder pass at admission
     chunk_multiple: int = 1         # prefill chunk must divide by this
+    speculative: bool = True        # k-token draft-verify decode (§14)
     reason: str = ""
 
 
@@ -44,7 +45,7 @@ def derive_capabilities(cfg: ModelConfig) -> Capabilities:
     if cfg.frontend == "patch_stub":
         return Capabilities(
             chunked_prefill=False, paged_decode=False, slot_chunk=False,
-            prefix_cache=False, kv_migration=False,
+            prefix_cache=False, kv_migration=False, speculative=False,
             reason="patch_stub modality frontend prepends frontend tokens "
                    "that have no chunked/paged deposit path")
     if cfg.is_encoder_decoder:
@@ -52,18 +53,22 @@ def derive_capabilities(cfg: ModelConfig) -> Capabilities:
             slot_chunk=False, carried_state=True,
             state_leaves=("cross_k", "cross_v"),
             prefix_cache=False, kv_migration=False, encoder_prechunk=True,
+            speculative=False,
             reason="carried cross-attention state is per-request, not in "
                    "KV blocks: prefix caching and KV-block migration "
-                   "would silently drop it")
+                   "would silently drop it, and speculative rollback "
+                   "cannot rewind it by a length decrement")
     if cfg.block in (BLOCK_SSM, BLOCK_HYBRID):
         return Capabilities(
             carried_state=True, state_leaves=("conv", "ssm"),
             prefix_cache=False, kv_migration=False,
-            chunk_multiple=cfg.ssm_chunk,
+            chunk_multiple=cfg.ssm_chunk, speculative=False,
             reason="recurrent carried state is per-request, not in KV "
                    "blocks: prefix caching and KV-block migration would "
                    "silently drop it; chunk boundaries must fall on "
-                   "ssm_chunk multiples for bit-exact scan resume")
+                   "ssm_chunk multiples for bit-exact scan resume; "
+                   "speculative rollback cannot rewind carried state "
+                   "advanced through rejected draft tokens")
     return Capabilities()
 
 
@@ -87,6 +92,9 @@ class Model(NamedTuple):
     prefill_chunk_paged: Any = None
     # copy-on-write block clone for the radix prefix cache (paged only)
     clone_paged_block: Any = None
+    # k-token teacher-forced verify dispatch (speculative decoding) —
+    # None when capabilities.speculative is False (carried-state rollback)
+    verify_step_paged: Any = None
     # enc-dec only: encoder pass as a fixed pre-chunk at admission
     encode_prechunk: Any = None
     # structural serving capabilities (always set; see derive_capabilities)
@@ -171,6 +179,8 @@ def build_model(cfg: ModelConfig, train: TrainConfig = None,
             if paged else None),
         clone_paged_block=(transformer.make_clone_block(cfg, knobs, tp)
                            if paged and caps.prefix_cache else None),
+        verify_step_paged=(transformer.make_verify_step_paged(cfg, knobs, tp)
+                           if paged and caps.speculative else None),
         capabilities=caps)
 
 

@@ -689,6 +689,48 @@ def make_decode_step_paged(cfg: ModelConfig, knobs, tp: int):
     return decode_step
 
 
+def make_verify_step_paged(cfg: ModelConfig, knobs, tp: int):
+    """K-token teacher-forced decode through block tables (speculative
+    verify, DESIGN.md §14): feed the q-block [current token, draft_1 ..
+    draft_{K-1}] in ONE dispatch, write the K KV rows with the same
+    drop-mode scatters as chunked prefill, and return full-width logits —
+    ``logits[:, j]`` is the target's next-token distribution after
+    consuming tokens ``.. j``, which is exactly what the acceptance rule
+    compares the drafts against. Rollback after a rejection is purely
+    structural: the engine advances the row's length by the accepted
+    count only, and the stale draft rows beyond it are out-causal-range
+    (``kpos <= qpos``) until the next dispatch overwrites them — no
+    blanking dispatch exists.
+
+    Dense/MoE families only: recurrent carried state (SSM/hybrid conv +
+    scan state) advances through *rejected* tokens and cannot be rolled
+    back by a length decrement, so the registry gates this path off for
+    carried-state families (``Capabilities.speculative``)."""
+    compute_dtype = L.dtype_of(knobs["compute_dtype"])
+    flags = layer_flags(cfg)
+
+    def verify_step(params, cache, tokens, positions, block_tables,
+                    n_valid):
+        """tokens (B,K) int32 — token j of row b at absolute position
+        ``positions[b] + j``; positions (B,) int32 (negative = parked
+        row, writes nothing); block_tables (B,NB); n_valid (B,) live
+        queries per row (<= K; trailing queries are padding) ->
+        (logits (B,K,Vp), cache)."""
+        B, K = tokens.shape
+        x = embed_tokens(cfg, params, tokens, compute_dtype)
+        qpos = positions[:, None] + jnp.arange(K)[None, :]
+        wvalid = ((jnp.arange(K)[None, :] < n_valid[:, None])
+                  & (positions >= 0)[:, None])
+        x, new_cache = _paged_backbone(cfg, params, x, block_tables, qpos,
+                                       wvalid, cache, flags)
+        w_out = lm_head_weight(cfg, params).astype(compute_dtype)
+        logits = jnp.einsum("bkd,dv->bkv", x, w_out).astype(jnp.float32)
+        vocab_ok = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        return jnp.where(vocab_ok[None, None], logits, L.NEG_INF), new_cache
+
+    return verify_step
+
+
 def make_prefill_chunk_paged(cfg: ModelConfig, knobs, tp: int):
     """Fixed-shape chunked prompt deposit through block tables: up to B
     chunk-rows from different requests write straight into the shared

@@ -71,8 +71,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import protocol
 from repro.serve.block_pool import PagedKVCache
-from repro.serve.kv_cache import SlotKVCache
+from repro.serve.kv_cache import SlotError, SlotKVCache
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import CellQueueScheduler, ServeRequest
 
@@ -208,7 +209,8 @@ class ContinuousEngine:
                  comm=None, max_prefill_per_step: int = 1,
                  prefill_chunk: int = 64, kv_layout: str = "slot",
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 role: str = "full", prefix_cache: bool = False):
+                 role: str = "full", prefix_cache: bool = False,
+                 speculate: int = 0, draft_model=None, draft_params=None):
         if kv_layout not in ("slot", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r} "
                              "(expected 'slot' or 'paged')")
@@ -318,6 +320,73 @@ class ContinuousEngine:
                                       donate_argnums=(0,))
         else:
             self.prefix_cache = None
+        # speculative decoding (DESIGN.md §14): a drafter proposes k
+        # tokens per round on its OWN paged pool; the target verifies
+        # them in one fused (k+1)-query dispatch and rejected draft KV
+        # rows roll back structurally (length decrement + the next
+        # dispatch's drop-mode overwrite — no blanking)
+        self.speculate = int(speculate)
+        if self.speculate < 0:
+            raise ValueError(f"speculate must be >= 0, got {speculate}")
+        if self.speculate:
+            if kv_layout != "paged":
+                raise ValueError("speculative decoding rolls rejected "
+                                 "draft KV back through block tables; it "
+                                 "requires kv_layout='paged'")
+            if role != "full":
+                raise ValueError("speculative decoding needs draft and "
+                                 "verify on one engine; it is not "
+                                 "supported on disaggregated "
+                                 "prefill/decode ranks")
+            if self.prefix_cache is not None:
+                raise ValueError(
+                    "speculative decoding does not compose with prefix "
+                    "caching: rolled-back draft rows would sit inside "
+                    "blocks the radix cache could lease to another "
+                    "request as canonical prefix KV")
+            if caps is not None and not caps.speculative:
+                raise ValueError("model lacks capability 'speculative': "
+                                 + caps.reason)
+            if getattr(model, "verify_step_paged", None) is None:
+                raise ValueError("speculative decoding needs the model's "
+                                 "k-token teacher-forced verify dispatch "
+                                 "(verify_step_paged)")
+            if draft_model is None:
+                # self-speculation: the target drafts for itself on a
+                # second pool — the degenerate pairing that exercises
+                # the full draft-verify-rollback machinery with a
+                # near-1.0 acceptance rate (smoke/CI default)
+                draft_model, draft_params = model, params
+            else:
+                if draft_params is None:
+                    raise ValueError("draft_model needs draft_params")
+                if draft_model.cfg.vocab_size != model.cfg.vocab_size:
+                    raise ValueError(
+                        f"drafter vocab {draft_model.cfg.vocab_size} != "
+                        f"target vocab {model.cfg.vocab_size}: drafted "
+                        "token ids would not index the target's "
+                        "distribution")
+                dcaps = getattr(draft_model, "capabilities", None)
+                if dcaps is not None and not dcaps.speculative:
+                    raise ValueError("draft model lacks capability "
+                                     "'speculative': " + dcaps.reason)
+                if getattr(draft_model, "verify_step_paged", None) is None:
+                    raise ValueError(
+                        "the drafter resyncs through its own teacher-"
+                        "forced verify dispatch (verify_step_paged)")
+            self.draft_model = draft_model
+            self.draft_params = draft_params
+            # the drafter's pool mirrors the target's geometry so rows
+            # and leases stay 1:1 (alloc/free in lockstep); its HBM cost
+            # is the drafter's own (smaller) per-token KV
+            self.draft_kv = PagedKVCache(
+                draft_model, num_blocks=self.kv.pool.num_blocks,
+                block_size=self.kv.block_size, num_slots=num_slots,
+                max_blocks_per_req=self.kv.max_blocks_per_req)
+            #: drafter's canonical resident tokens per row (host-side;
+            #: the drafter pool's own length bookkeeping is unused — the
+            #: model path takes explicit positions)
+            self._draft_len = np.zeros((num_slots,), np.int32)
         self.scheduler = scheduler or CellQueueScheduler(
             num_cells=4 * num_slots,
             prefill_chunk_bytes=4 * self.prefill_chunk,
@@ -327,9 +396,16 @@ class ContinuousEngine:
         if comm is not None:
             self._prefill_stream = comm.stream("prefill")
             self._decode_stream = comm.stream("decode")
+            # draft and verify are distinct execution domains (the
+            # drafter's pool advances independently of the target's):
+            # each gets its own program order, free to overlap the other
+            self._draft_stream = comm.stream("draft")
+            self._verify_stream = comm.stream("verify")
         else:
             self._prefill_stream = _NullStream()
             self._decode_stream = _NullStream()
+            self._draft_stream = _NullStream()
+            self._verify_stream = _NullStream()
 
         # trace counters ~= XLA compile counts (a jit retraces exactly
         # when it compiles a new program); the bench artifact uses these
@@ -372,6 +448,27 @@ class ContinuousEngine:
                 return chunk_fn(p, buf, state, *rest)
 
             self._chunk = jax.jit(_chunk_traced, donate_argnums=(1, 2))
+        if self.speculate:
+            spec_fn = self._spec_round_impl(model, self.draft_model,
+                                            self.speculate)
+
+            def _spec_traced(p, dp, buf, dbuf, *rest):
+                self.decode_compiles += 1
+                return spec_fn(p, dp, buf, dbuf, *rest)
+
+            self._spec_round = jax.jit(_spec_traced, donate_argnums=(2, 3))
+
+            def _draft_chunk_fn(dp, dbuf, tokens, tables, rows, pos0,
+                                n_valid):
+                # mirror of the target's prompt deposit into the
+                # drafter's pool: logits are discarded (the drafter's
+                # first proposal comes from the resync dispatch)
+                _, dbuf = self.draft_model.prefill_chunk_paged(
+                    dp, dbuf, tokens, tables, rows, pos0, n_valid)
+                return dbuf
+
+            self._draft_chunk = jax.jit(_draft_chunk_fn,
+                                        donate_argnums=(1,))
         #: partially-deposited requests, FIFO; each micro-step serves the
         #: first ``max_prefill_per_step`` of them with one fused dispatch
         self._prefilling: Deque[_PrefillJob] = deque()
@@ -569,12 +666,76 @@ class ContinuousEngine:
 
         return fn
 
+    @staticmethod
+    def _spec_round_impl(model, draft_model, k):
+        """One fused draft–verify round (DESIGN.md §14), everything on
+        device — drafter resync, k-token autoregressive draft, the
+        target's single (k+1)-query verify, and longest-matching-prefix
+        acceptance — so the host pays ONE token sync per round (the
+        spec-mode analogue of ``_decode_micro_step``'s one sync).
+
+        Per live row: the drafter first *resyncs* — a fixed width-2
+        teacher-forced dispatch consuming the ``u ∈ {1, 2}`` canonical
+        tokens it has not seen (``u == 2`` exactly after a fully-accepted
+        round; the emitted-token history lives on the host, so ``prev``/
+        ``cur`` arrive as inputs) — whose last valid logits row yields
+        draft 1; then ``k - 1`` single-token drafter decode steps extend
+        the proposal. The target verifies ``[cur, d_1 .. d_k]`` in one
+        fused dispatch; ``greedy[:, j]`` is its next-token choice after
+        consuming tokens through ``j``, so the longest matching prefix
+        plus the target's own token at the first mismatch reproduces
+        sequential greedy decode token-for-token. Returned ``greedy`` is
+        the emission buffer itself: tokens ``greedy[b, :n_emit[b]]`` are
+        exactly what sequential decode would have produced.
+
+        Rollback is structural: rejected draft rows (target pool) and
+        unaccepted drafter rows sit at positions beyond the new canonical
+        length — out of causal range (``kpos <= qpos``) for every later
+        valid query until a later dispatch's drop-mode write overwrites
+        them. Drafter steps beyond ``n_draft`` park their write position
+        (``PARK_POS``): near the request's token budget the clamp
+        ``n_draft < k`` would otherwise let a stale draft write overrun
+        the row's block lease."""
+        def fn(params, dparams, buf, dbuf, cur, prev, u, sync_pos, tpos,
+               n_draft, tables, dtables):
+            sync_tok = jnp.where((u == 2)[:, None],
+                                 jnp.stack([prev, cur], axis=1),
+                                 jnp.stack([cur, cur], axis=1))
+            dlogits, dbuf = draft_model.verify_step_paged(
+                dparams, dbuf, sync_tok, sync_pos, dtables, u)
+            dnext = jnp.argmax(dlogits, -1).astype(jnp.int32)
+            drafts = [jnp.take_along_axis(
+                dnext, jnp.maximum(u - 1, 0)[:, None], axis=1)[:, 0]]
+            base = sync_pos + u            # next drafter write position
+            for j in range(k - 1):
+                pos_j = jnp.where(j + 1 <= n_draft, base + j, PARK_POS)
+                lg, dbuf = draft_model.decode_step_paged(
+                    dparams, dbuf, drafts[-1][:, None], pos_j, dtables)
+                drafts.append(jnp.argmax(lg, -1).astype(jnp.int32))
+            drafts = jnp.stack(drafts, axis=1)                    # (S, k)
+            vtok = jnp.concatenate([cur[:, None], drafts], axis=1)
+            logits, buf = model.verify_step_paged(
+                params, buf, vtok, tpos, tables, n_draft + 1)
+            greedy = jnp.argmax(logits, -1).astype(jnp.int32)   # (S, k+1)
+            match = ((drafts == greedy[:, :k])
+                     & (jnp.arange(k)[None, :] < n_draft[:, None]))
+            n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), 1), 1)
+            return greedy, n_acc + 1, buf, dbuf
+
+        return fn
+
     # -- request intake ----------------------------------------------------
     def submit(self, req: ServeRequest, now: float = 0.0) -> str:
         """Queue a request through the cell-queue scheduler. A paged
         request whose token budget can never fit its block-table is
         rejected here, at submit — not discovered as a crash in the
         admission gate once it reaches the queue head."""
+        if self.speculate and req.temperature > 0.0:
+            raise ValueError(
+                f"request {req.rid}: speculative decoding verifies "
+                "greedy token identity (longest-matching-prefix "
+                "acceptance is exact for argmax only); temperature must "
+                f"be 0, got {req.temperature}")
         if self.kv_layout == "paged":
             budget = self._token_budget(req)
             cap = self.admittable_tokens
@@ -665,7 +826,8 @@ class ContinuousEngine:
                 if done is not None:
                     finished.append(done)
         if self.num_decoding:
-            finished.extend(self._decode_micro_step(now))
+            finished.extend(self._spec_micro_step(now) if self.speculate
+                            else self._decode_micro_step(now))
         self._account()
         return finished
 
@@ -735,6 +897,30 @@ class ContinuousEngine:
             **pc.stats(),
         }
 
+    @property
+    def decode_tokens_per_dispatch(self) -> float:
+        """Tokens one decode dispatch yields on this engine: 1.0 without
+        speculation; with it, the observed mean accepted-per-dispatch
+        (or the ``(k + 2) / 2`` uniform-acceptance prior before any
+        round has run). The fabric's placement cost model divides decode
+        dispatch counts by this — a hardcoded one-token-per-dispatch
+        assumption would systematically overprice speculative ranks."""
+        if not self.speculate:
+            return 1.0
+        sch = self.scheduler
+        if sch.n_spec_dispatches:
+            return sch.spec_accepted_tokens / sch.n_spec_dispatches
+        return (self.speculate + 2) / 2
+
+    def spec_stats(self) -> dict:
+        """Speculative-decoding evidence for BENCH_serve (empty when
+        speculation is off): per-dispatch acceptance and the modeled
+        §3.2 round cost the scheduler aggregated."""
+        if not self.speculate:
+            return {}
+        return {"speculate_k": float(self.speculate),
+                **self.scheduler.spec_stats()}
+
     # -- chunked prompt deposit (rendezvous-style streaming) ---------------
     def _begin_prefill(self, req: ServeRequest) -> None:
         """Claim a slot (or lease blocks + a request row) and enter the
@@ -749,6 +935,15 @@ class ContinuousEngine:
                 slot, resident = self._admit_with_prefix(req)
             else:
                 slot = self.kv.alloc(req, self._token_budget(req))
+            if self.speculate:
+                # lockstep lease: the drafter's pool mirrors every
+                # alloc/free, so both pools always hand out the same row
+                dslot = self.draft_kv.alloc(req, self._token_budget(req))
+                if dslot != slot:
+                    raise SlotError(
+                        f"drafter row {dslot} diverged from target row "
+                        f"{slot} for request {req.rid}: the pools' "
+                        "alloc/free lockstep broke")
             if self._encode is not None:
                 # enc-dec: the fixed encoder pre-chunk — install this
                 # request's cross K/V carried state into its row before
@@ -855,6 +1050,17 @@ class ContinuousEngine:
                 jnp.asarray(fin_pos), jnp.asarray(keys), jnp.asarray(temps))
         self.kv.swap_buffers(self._prefill_stream.ordered(buf))
         self._state = state
+        if self.kv_layout == "paged" and self.speculate:
+            # mirror the prompt chunk into the drafter's pool: same
+            # tokens/offsets, the drafter's own tables (its rows were
+            # leased in lockstep at _begin_prefill)
+            dbuf = self._draft_chunk(
+                self.draft_params, self.draft_kv.buffers,
+                jnp.asarray(tok),
+                jnp.asarray(self.draft_kv.table_rows(slots)),
+                jnp.asarray(slots), jnp.asarray(pos0),
+                jnp.asarray(n_valid))
+            self.draft_kv.swap_buffers(self._draft_stream.ordered(dbuf))
 
         finished: List[ServeRequest] = []
         tok0_np = None
@@ -863,6 +1069,10 @@ class ContinuousEngine:
             self.kv.advance(job.slot, int(n_valid[i]))  # pages appended
             if fin_pos[i] < 0:
                 continue
+            if self.speculate:
+                # drafter now holds the full prompt; emitted tokens are
+                # what each round's resync dispatch will feed it
+                self._draft_len[job.slot] = len(job.tokens)
             if tok0_np is None:       # host sync only when a prompt completes
                 tok0_np = np.asarray(tok0)
             self._prefilling.remove(job)
@@ -956,10 +1166,94 @@ class ContinuousEngine:
                 self._slot_out[slot] = None
         return finished
 
+    def _spec_micro_step(self, now: float) -> List[ServeRequest]:
+        """Spec-mode decode micro-step: ONE fused draft–verify round over
+        every decoding row (``_spec_round_impl``) replaces up to ``k+1``
+        single-token dispatches. The host builds the round's inputs from
+        its own bookkeeping (emitted tokens, canonical lengths, drafter
+        coverage), dispatches, then syncs the emission buffer once.
+
+        Per row: ``tpos`` (the target's next write position) is the
+        row's canonical resident length ``P + g - 1``; the canonical
+        context is one token longer (the pending token ``cur``); the
+        drafter has consumed ``u = canon - draft_len ∈ {1, 2}`` fewer
+        tokens. ``n_draft`` clamps to ``remaining - 1`` so the budget is
+        never overdrawn — at ``remaining == 1`` the round degenerates to
+        a plain (teacher-forced width-1) decode of the same fixed
+        shape."""
+        k = self.speculate
+        S = self.kv.num_slots
+        cur = np.zeros((S,), np.int32)
+        prev = np.zeros((S,), np.int32)
+        u = np.ones((S,), np.int32)
+        sync_pos = np.full((S,), PARK_POS, np.int32)
+        tpos = np.full((S,), PARK_POS, np.int32)
+        n_draft = np.zeros((S,), np.int32)
+        live: List[int] = []
+        for slot in self.kv.live_slots:
+            req = self._slot_req[slot]
+            if req is None:        # slot still mid-prefill: parked row
+                continue
+            g = req.generated
+            out = self._slot_out[slot]
+            cur[slot] = out[g - 1]
+            prev[slot] = out[g - 2] if g >= 2 else out[g - 1]
+            canon = self.kv.length(slot) + 1   # resident + pending token
+            uu = canon - int(self._draft_len[slot])
+            u[slot] = uu
+            sync_pos[slot] = canon - uu
+            tpos[slot] = canon - 1
+            n_draft[slot] = min(k, req.max_new_tokens - g - 1)
+            live.append(slot)
+        greedy, n_emit, buf, dbuf = self._spec_round(
+            self.params, self.draft_params, self.kv.buffers,
+            self.draft_kv.buffers, jnp.asarray(cur), jnp.asarray(prev),
+            jnp.asarray(u), jnp.asarray(sync_pos), jnp.asarray(tpos),
+            jnp.asarray(n_draft), self.kv.tables_device(),
+            self.draft_kv.tables_device())
+        self.kv.swap_buffers(self._verify_stream.ordered(buf))
+        self.draft_kv.swap_buffers(self._draft_stream.ordered(dbuf))
+        greedy_np = np.asarray(greedy)     # the one host sync per round
+        n_emit_np = np.asarray(n_emit)
+
+        cost = protocol.speculative_verify_latency(k)
+        finished: List[ServeRequest] = []
+        for slot in live:
+            req = self._slot_req[slot]
+            out = self._slot_out[slot]
+            g = req.generated
+            ne = int(n_emit_np[slot])
+            em = greedy_np[slot, :ne]
+            keep = ne
+            if self.eos_id >= 0:
+                hits = np.nonzero(em == self.eos_id)[0]
+                if hits.size:                  # truncate at first EOS —
+                    keep = int(hits[0]) + 1    # post-EOS columns stay
+            out[g:g + keep] = em[:keep]        # eos/0-filled
+            req.generated = g + keep
+            # drafter coverage after this round: the resync + draft
+            # steps deposited through position canon + min(n_acc, k) - 1,
+            # of which min(n_acc, k-1) past-canon rows are canonical
+            canon = self.kv.length(slot) + 1
+            self._draft_len[slot] = canon + min(ne - 1, k - 1)
+            self.kv.advance(slot, keep)        # accepted rows only: the
+            # stale draft rows beyond stay structurally rolled back
+            self.scheduler.record_spec_dispatch(
+                keep, int(n_draft[slot]), ne - 1, cost)
+            if (self.eos_id >= 0 and em[keep - 1] == self.eos_id) \
+                    or req.generated >= req.max_new_tokens:
+                finished.append(self._finish(slot, req, out, now))
+                self._slot_req[slot] = None
+                self._slot_out[slot] = None
+        return finished
+
     def _finish(self, slot: int, req: ServeRequest, out: np.ndarray,
                 now: float) -> ServeRequest:
         req.output = out
         self.kv.free(slot)
+        if self.speculate:
+            self.draft_kv.free(slot)       # lockstep with the target row
+            self._draft_len[slot] = 0
         # park the freed slot's device position so its decode-vmap row
         # stops writing (stale-slot advance was silently corrupting
         # engine reuse before)
@@ -1047,6 +1341,9 @@ class ContinuousEngine:
                 # retention by design, not leaks for the pool to name
                 self.prefix_cache.clear()
             self.kv.reset(strict=strict)
+        if self.speculate:
+            self.draft_kv.reset(strict=strict)
+            self._draft_len[:] = 0
         self.scheduler.reset()
         self.peak_live = 0
         self._resident_tok_sum = 0

@@ -31,6 +31,7 @@ eligible (:mod:`~repro.serve.fabric.placement`):
 from __future__ import annotations
 
 import warnings
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional
 
 import jax
@@ -130,6 +131,16 @@ class ServingFabric:
                           if self.placement.needs_migration else None)
         self.finished: List[ServeRequest] = []
         self.total_steps = 0
+        # ranks are THREADS (the paper's thesis): each engine rank owns
+        # disjoint state (its own derived comm context, streams, KV
+        # pools, scheduler, jits), so their micro-steps are stepped
+        # concurrently — XLA releases the GIL during compiled execution,
+        # so rank dispatches overlap on a multi-core host instead of
+        # serializing in the driver loop (which would forfeit exactly
+        # the independence the per-rank contexts buy)
+        self._rank_pool = (ThreadPoolExecutor(
+            max_workers=self.ranks, thread_name_prefix="fabric-rank")
+            if self.ranks > 1 else None)
 
     @staticmethod
     def _engine_comms(root: ThreadComm, ranks: int) -> List:
@@ -227,12 +238,21 @@ class ServingFabric:
 
     # -- micro-step --------------------------------------------------------
     def step(self, now: float = 0.0) -> List[ServeRequest]:
-        """One fabric micro-step: dispatch, advance every rank, migrate.
-        Returns the requests that finished anywhere this step."""
+        """One fabric micro-step: dispatch, advance every rank
+        (concurrently — rank threads overlap their compiled dispatches),
+        migrate. Returns the requests that finished anywhere this step.
+        Dispatch and migration stay on the router thread: they read and
+        write cross-rank state (JSQ loads, block leases on two pools),
+        while a rank's micro-step touches only its own."""
         self._dispatch(now)
         finished: List[ServeRequest] = []
-        for w in self.workers:
-            finished.extend(w.step(now))
+        if self._rank_pool is not None:
+            for done in self._rank_pool.map(
+                    lambda w: w.step(now), self.workers):
+                finished.extend(done)
+        else:
+            for w in self.workers:
+                finished.extend(w.step(now))
         if self.placement.needs_migration:
             self._migrate(now)
         self.finished.extend(finished)
@@ -329,6 +349,9 @@ class ServingFabric:
                     raise LeaseLeakError(msg)
                 warnings.warn(msg, LeaseLeakWarning, stacklevel=2)
         finally:
+            if self._rank_pool is not None:
+                self._rank_pool.shutdown(wait=True)
+                self._rank_pool = None
             if self._owns_comm:
                 self.comm.finish()
                 self.comm.free()

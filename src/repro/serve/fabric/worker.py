@@ -62,11 +62,26 @@ class EngineWorker:
         count-based JSQ rates a 16-token and a 256-token prompt the
         same; this is the unit fix — ranks equalize modeled *work*, not
         request count. ``decode_only`` is the migrated-in share: the
-        decode rank never re-pays the prompt deposit."""
+        decode rank never re-pays the prompt deposit.
+
+        Decode is priced per *dispatch*, not per token: a speculative
+        engine emits ``decode_tokens_per_dispatch`` tokens per round
+        (observed acceptance, or its prior before data), so its dispatch
+        count for the same ``max_new_tokens`` is proportionally lower —
+        the old hardcoded one-token-per-dispatch assumption overpriced
+        speculative ranks by exactly that factor and would steer a
+        mixed-fleet JSQ away from its fastest ranks."""
         s = self.engine.scheduler
         m = s.host_model
-        cost = req.max_new_tokens * protocol.interthread_latency(
-            s.itemsize, m)
+        per_dispatch = self.engine.decode_tokens_per_dispatch
+        dispatches = -(-req.max_new_tokens // max(1.0, per_dispatch))
+        spec_k = getattr(self.engine, "speculate", 0)
+        if spec_k:
+            cost = dispatches * protocol.speculative_verify_latency(
+                spec_k, s.itemsize, m)
+        else:
+            cost = dispatches * protocol.interthread_latency(
+                s.itemsize, m)
         if not decode_only:
             nbytes = req.prompt_len * s.itemsize
             proto = protocol.select_protocol(nbytes, interthread=True,

@@ -160,6 +160,14 @@ class CellQueueScheduler:
         self.n_prefix_hits = 0
         self.prefix_tokens_saved = 0
         self.modeled_prefix_hit_cost_s = 0.0
+        # speculative decoding accounting (DESIGN.md §14): one "dispatch"
+        # per live row per verify round; accepted counts the tokens each
+        # dispatch emitted (drafted prefix + the target's own token)
+        self.n_spec_dispatches = 0
+        self.spec_accepted_tokens = 0
+        self.spec_drafted_tokens = 0
+        self.spec_matched_tokens = 0
+        self.spec_modeled_cost_s = 0.0
 
     def reset(self) -> None:
         """Drop all queued/finished requests and zero the accounting —
@@ -179,6 +187,11 @@ class CellQueueScheduler:
         self.n_prefix_hits = 0
         self.prefix_tokens_saved = 0
         self.modeled_prefix_hit_cost_s = 0.0
+        self.n_spec_dispatches = 0
+        self.spec_accepted_tokens = 0
+        self.spec_drafted_tokens = 0
+        self.spec_matched_tokens = 0
+        self.spec_modeled_cost_s = 0.0
 
     # -- classification ----------------------------------------------------
     def _price(self, nbytes: int, proto: str) -> float:
@@ -316,6 +329,34 @@ class CellQueueScheduler:
             out.append(req)
             free_slots -= 1
         return out
+
+    def record_spec_dispatch(self, accepted: int, drafted: int,
+                             matched: int, cost_s: float) -> None:
+        """Account one row's draft–verify round (DESIGN.md §14):
+        ``accepted`` tokens emitted by the fused verify dispatch (matched
+        draft prefix + the target's own next token), ``drafted`` tokens
+        the drafter proposed, ``matched`` of them accepted, and the
+        round's §3.2 protocol price
+        (:func:`repro.core.protocol.speculative_verify_latency`)."""
+        self.n_spec_dispatches += 1
+        self.spec_accepted_tokens += int(accepted)
+        self.spec_drafted_tokens += int(drafted)
+        self.spec_matched_tokens += int(matched)
+        self.spec_modeled_cost_s += float(cost_s)
+
+    def spec_stats(self) -> Dict[str, float]:
+        """Speculative accounting rows; zeros when speculation is off."""
+        d = max(1, self.n_spec_dispatches)
+        return {
+            "spec_dispatches": float(self.n_spec_dispatches),
+            "spec_accepted_tokens": float(self.spec_accepted_tokens),
+            "spec_drafted_tokens": float(self.spec_drafted_tokens),
+            "accepted_per_dispatch": self.spec_accepted_tokens / d,
+            "acceptance_rate": (
+                self.spec_matched_tokens / self.spec_drafted_tokens
+                if self.spec_drafted_tokens else 0.0),
+            "spec_modeled_cost_us": 1e6 * self.spec_modeled_cost_s,
+        }
 
     # -- completion / stats ------------------------------------------------
     def record_finish(self, req: ServeRequest, now: float) -> None:

@@ -230,6 +230,86 @@ def test_paged_attention_block_scatter_invariance():
 
 
 # ---------------------------------------------------------------------------
+# paged attention, multi-query (speculative verify q-block)
+# ---------------------------------------------------------------------------
+
+def _paged_mq_inputs(B, H, Hkv, hd, P, bs, NB, K, seed=0, dtype=jnp.float32):
+    """Pool/table fixtures plus a (B, K, H, hd) q-block; lengths clamped
+    so every query position ``lengths[b] - K + j`` is a real token."""
+    _, kp, vp, bt, ln = _paged_inputs(B, H, Hkv, hd, P, bs, NB, seed=seed,
+                                      dtype=dtype)
+    q = jax.random.normal(jax.random.PRNGKey(seed + 100),
+                          (B, K, H, hd)).astype(dtype)
+    return q, kp, vp, bt, jnp.maximum(ln, K)
+
+
+@pytest.mark.parametrize("K", [1, 2, 3, 4])
+@pytest.mark.parametrize("B,H,Hkv,hd,P,bs,NB", [
+    (2, 4, 4, 16, 10, 8, 4),
+    (3, 4, 2, 32, 16, 16, 4),            # GQA
+    (2, 8, 1, 64, 12, 8, 4),             # MQA
+])
+def test_paged_attention_mq_matches_ref(B, H, Hkv, hd, P, bs, NB, K):
+    q, kp, vp, bt, ln = _paged_mq_inputs(B, H, Hkv, hd, P, bs, NB, K)
+    out = paged_attention(q, kp, vp, bt, ln)
+    assert out.shape == (B, K, H, hd)
+    ref = paged_attention_ref(q, kp, vp, bt, ln)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_attention_mq_k1_bit_identical_to_single():
+    """The q-block kernel at K=1 must reduce to the single-token kernel
+    BIT-EXACTLY — same loop structure, same accumulation order — so a
+    speculative engine at k=1 prices and computes like the plain one."""
+    from repro.kernels.paged_attention.paged_attention import (
+        paged_attention_fwd,
+    )
+    q, kp, vp, bt, ln = _paged_inputs(3, 4, 2, 32, 16, 16, 4, seed=5)
+    single = paged_attention_fwd(q, kp, vp, bt, ln, interpret=True)
+    mq = paged_attention_fwd(q[:, None], kp, vp, bt, ln, interpret=True)
+    np.testing.assert_array_equal(np.asarray(mq[:, 0]), np.asarray(single))
+
+
+def test_paged_attention_mq_identity_table_matches_flash():
+    """Identity table + q-block == dense causal attention over the last K
+    positions (flash oracle with q_offset = L - K)."""
+    B, H, Hkv, hd, bs, NB, K = 2, 4, 2, 32, 8, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    Sk = NB * bs
+    ln = jnp.array([Sk, Sk - 5], jnp.int32)
+    kp = jax.random.normal(ks[1], (NB * B, bs, Hkv, hd))
+    vp = jax.random.normal(ks[2], (NB * B, bs, Hkv, hd))
+    q = jax.random.normal(ks[0], (B, K, H, hd))
+    bt = jnp.arange(B * NB, dtype=jnp.int32).reshape(B, NB)
+    out = paged_attention(q, kp, vp, bt, ln)
+    kd = kp.reshape(B, Sk, Hkv, hd).transpose(0, 2, 1, 3)
+    vd = vp.reshape(B, Sk, Hkv, hd).transpose(0, 2, 1, 3)
+    for b in range(B):
+        L_b = int(ln[b])
+        ref = flash_attention_ref(
+            q[b:b + 1].transpose(0, 2, 1, 3), kd[b:b + 1, :, :L_b],
+            vd[b:b + 1, :, :L_b], causal=True,
+            q_offset=L_b - K).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out[b:b + 1]), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_paged_attention_mq_block_scatter_invariance():
+    """q-block output depends only on table order, not pool placement."""
+    q, kp, vp, bt, ln = _paged_mq_inputs(2, 4, 2, 16, 10, 8, 4, 3, seed=7)
+    out = paged_attention(q, kp, vp, bt, ln)
+    perm = np.random.default_rng(1).permutation(kp.shape[0])
+    inv = np.argsort(perm)
+    kp2 = jnp.asarray(np.asarray(kp)[perm])
+    vp2 = jnp.asarray(np.asarray(vp)[perm])
+    bt2 = jnp.where(bt >= 0, jnp.asarray(inv)[jnp.maximum(bt, 0)], -1)
+    out2 = paged_attention(q, kp2, vp2, bt2, ln)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               atol=2e-6, rtol=2e-6)
+
+
+# ---------------------------------------------------------------------------
 # ssd scan
 # ---------------------------------------------------------------------------
 

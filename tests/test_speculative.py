@@ -1,0 +1,261 @@
+"""Speculative decoding on the paged engine (DESIGN.md §14): greedy
+token identity against the non-speculative paged baseline (the
+acceptance bar — speculation must be an optimization, never a sampler),
+acceptance accounting, structural rollback of rejected draft KV, the
+capability/composition gates, and the per-dispatch pricing the fabric
+router consumes."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig, TrainConfig
+from repro.configs import get_smoke_config
+from repro.core import protocol
+from repro.models.registry import build_model, make_synthetic_batch
+from repro.serve import ContinuousEngine, ServeRequest
+from repro.serve.fabric.worker import EngineWorker
+
+TRAIN = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                    loss_chunk=16, attn_chunk_threshold=64, attn_chunk=16,
+                    remat=False)
+
+
+def _bundle(arch="gemma-2b", seed=0):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, TRAIN, ServeConfig(), tp=1)
+    return cfg, model, model.init(jax.random.PRNGKey(seed))
+
+
+def _prompt(cfg, B=4, S=8):
+    batch = make_synthetic_batch(cfg, B, S, compute_dtype="float32")
+    return {"tokens": batch["tokens"]}
+
+
+def _paged(model, params, **kw):
+    kw.setdefault("cache_len", 24)
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("prefill_chunk", 4)
+    kw.setdefault("kv_layout", "paged")
+    kw.setdefault("block_size", 8)
+    return ContinuousEngine(model, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# token identity (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_spec_greedy_token_identity(k):
+    """Self-drafted speculation at every k emits exactly the tokens the
+    non-speculative paged engine emits — acceptance is an optimization,
+    not a sampler."""
+    cfg, model, params = _bundle()
+    prompt = _prompt(cfg, B=4, S=8)
+    base = _paged(model, params).generate(prompt, 12)
+    spec = _paged(model, params, speculate=k).generate(prompt, 12)
+    assert np.array_equal(base, spec)
+
+
+def test_spec_distinct_drafter_token_identity():
+    """A drafter with DIFFERENT weights (separately initialized same
+    arch) disagrees with the target almost everywhere — near-zero
+    acceptance — yet the output must still be token-identical: every
+    emitted token is the target's own argmax, and rejected draft KV rows
+    roll back structurally through the block tables."""
+    cfg, model, params = _bundle()
+    _, dmodel, dparams = _bundle(seed=1)
+    prompt = _prompt(cfg, B=3, S=8)
+    base = _paged(model, params).generate(prompt, 10)
+    eng = _paged(model, params, speculate=3,
+                 draft_model=dmodel, draft_params=dparams)
+    assert np.array_equal(base, eng.generate(prompt, 10))
+    st = eng.spec_stats()
+    # every dispatch still emits >= 1 token (the target's own)
+    assert st["accepted_per_dispatch"] >= 1.0
+
+
+def test_spec_multi_chunk_prompts_identity():
+    """Prompts spanning several chunks and blocks (drafter pool deposits
+    in lockstep with the target's chunked prefill)."""
+    cfg, model, params = _bundle()
+    prompt = _prompt(cfg, B=3, S=21)
+    base = _paged(model, params, cache_len=32, num_slots=3,
+                  prefill_chunk=6, block_size=4).generate(prompt, 8)
+    spec = _paged(model, params, cache_len=32, num_slots=3,
+                  prefill_chunk=6, block_size=4,
+                  speculate=2).generate(prompt, 8)
+    assert np.array_equal(base, spec)
+
+
+def test_spec_eos_truncation_identity_and_lease_release():
+    cfg, model, params = _bundle()
+    prompt = _prompt(cfg, B=2, S=8)
+    ref = _paged(model, params, cache_len=40, num_slots=2).generate(
+        prompt, 16)
+    eos = int(ref[0, 3])               # force an early EOS for row 0
+    base = _paged(model, params, cache_len=40, num_slots=2,
+                  eos_id=eos).generate(prompt, 16)
+    eng = _paged(model, params, cache_len=40, num_slots=2, eos_id=eos,
+                 speculate=3)
+    out = eng.generate(prompt, 16)
+    assert np.array_equal(base, out)
+    # both pools fully released (drafter leases freed with the target's)
+    assert eng.kv.num_live == 0
+    assert eng.kv.num_free_blocks == eng.kv.pool.num_blocks
+    assert eng.draft_kv.num_live == 0
+
+
+def test_spec_k_exceeds_remaining_budget():
+    """k larger than max_new_tokens: the per-round draft width clamps to
+    the remaining budget (never overruns the lease or output buffer)."""
+    cfg, model, params = _bundle()
+    prompt = _prompt(cfg, B=2, S=8)
+    base = _paged(model, params).generate(prompt, 2)
+    spec = _paged(model, params, speculate=4).generate(prompt, 2)
+    assert np.array_equal(base, spec)
+
+
+def test_spec_block_recycling_identity():
+    """More requests than the pools hold at once: both pools recycle
+    blocks across requests in lockstep and stale draft pages must not
+    leak into verification."""
+    cfg, model, params = _bundle()
+    prompt = _prompt(cfg, B=4, S=8)
+    base = _paged(model, params, num_slots=2, num_blocks=6).generate(
+        prompt, 10)
+    spec = _paged(model, params, num_slots=2, num_blocks=6,
+                  speculate=2).generate(prompt, 10)
+    assert np.array_equal(base, spec)
+
+
+def test_spec_engine_reset_reusable():
+    cfg, model, params = _bundle()
+    eng = _paged(model, params, speculate=2)
+    eng.generate(_prompt(cfg, B=2, S=8), 4)
+    eng.reset()
+    assert eng.kv.num_live == 0 and eng.draft_kv.num_live == 0
+    assert eng.scheduler.n_spec_dispatches == 0     # counters cleared
+    out = eng.generate(_prompt(cfg, B=2, S=8), 4)
+    assert out.shape == (2, 4)
+
+
+# ---------------------------------------------------------------------------
+# acceptance accounting
+# ---------------------------------------------------------------------------
+
+def test_spec_self_draft_accepts_more_than_one_per_dispatch():
+    """Self-speculation accepts (nearly) everything: mean accepted
+    tokens per verify dispatch must exceed 1 — the whole point of the
+    fused k-token dispatch."""
+    cfg, model, params = _bundle()
+    eng = _paged(model, params, cache_len=40, num_slots=4, speculate=3)
+    eng.generate(_prompt(cfg, B=4, S=8), 16)
+    st = eng.spec_stats()
+    assert st["speculate_k"] == 3.0
+    assert st["spec_dispatches"] > 0
+    assert st["accepted_per_dispatch"] > 1.0
+    assert st["acceptance_rate"] == pytest.approx(1.0)
+    assert st["spec_modeled_cost_us"] > 0.0
+    # observed yield feeds the router's per-dispatch pricing
+    assert eng.decode_tokens_per_dispatch == pytest.approx(
+        st["accepted_per_dispatch"])
+
+
+def test_spec_stats_empty_when_off():
+    cfg, model, params = _bundle()
+    eng = _paged(model, params)
+    assert eng.spec_stats() == {}
+    assert eng.decode_tokens_per_dispatch == 1.0
+
+
+# ---------------------------------------------------------------------------
+# gates (capability, composition, sampling)
+# ---------------------------------------------------------------------------
+
+def test_spec_requires_paged_layout():
+    cfg, model, params = _bundle()
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousEngine(model, params, cache_len=24, num_slots=2,
+                         prefill_chunk=4, speculate=2)
+
+
+def test_spec_carried_state_family_raises_naming_capability():
+    """SSM families carry recurrent state per emitted token — a k-token
+    verify cannot roll state back — so the gate raises at construction,
+    naming the missing capability."""
+    cfg, model, params = _bundle("mamba2-370m")
+    with pytest.raises(ValueError, match="speculative"):
+        ContinuousEngine(model, params, cache_len=24, num_slots=2,
+                         prefill_chunk=8, kv_layout="paged", block_size=4,
+                         speculate=2)
+
+
+def test_spec_prefix_cache_composition_rejected():
+    cfg, model, params = _bundle()
+    with pytest.raises(ValueError, match="prefix"):
+        _paged(model, params, speculate=2, prefix_cache=True)
+
+
+def test_spec_temperature_rejected_at_submit():
+    cfg, model, params = _bundle()
+    eng = _paged(model, params, speculate=2)
+    batch = make_synthetic_batch(cfg, 1, 8, compute_dtype="float32")
+    req = ServeRequest(rid=0, batch={"tokens": np.asarray(batch["tokens"])},
+                       max_new_tokens=4, temperature=0.7)
+    with pytest.raises(ValueError, match="temperature"):
+        eng.submit(req)
+    assert eng.scheduler.num_waiting == 0
+
+
+def test_spec_negative_k_rejected():
+    cfg, model, params = _bundle()
+    with pytest.raises(ValueError, match="speculate"):
+        _paged(model, params, speculate=-1)
+
+
+def test_spec_drafter_without_params_rejected():
+    cfg, model, params = _bundle()
+    with pytest.raises(ValueError, match="draft_params"):
+        _paged(model, params, speculate=2, draft_model=model)
+
+
+# ---------------------------------------------------------------------------
+# pricing (protocol model + fabric router)
+# ---------------------------------------------------------------------------
+
+def test_protocol_speculative_verify_latency_monotone():
+    lats = [protocol.speculative_verify_latency(k) for k in (1, 2, 4, 8)]
+    assert all(b > a for a, b in zip(lats, lats[1:]))
+    # sublinear in k: the stream-claim handshake amortizes over the
+    # fused dispatch, so doubling k less than doubles the round price —
+    # the messaging the fusion saves vs per-token dispatches
+    assert lats[3] < 2 * lats[2] and lats[2] < 2 * lats[1]
+    with pytest.raises(ValueError, match="k"):
+        protocol.speculative_verify_latency(0)
+
+
+def test_worker_predicted_cost_prices_per_dispatch():
+    """The JSQ load model divides decode work by the engine's per-
+    dispatch token yield: a speculative rank predicts FEWER dispatches
+    for the same max_new_tokens (the old hardcoded one-token-per-
+    dispatch assumption overpriced speculative ranks)."""
+    cfg, model, params = _bundle()
+    plain = EngineWorker(0, "full", _paged(model, params))
+    spec = EngineWorker(1, "full", _paged(model, params, speculate=3))
+    batch = make_synthetic_batch(cfg, 1, 8, compute_dtype="float32")
+    req = ServeRequest(rid=0, batch={"tokens": np.asarray(batch["tokens"])},
+                       max_new_tokens=12)
+    c_plain = plain.predicted_cost_s(req, decode_only=True)
+    c_spec = spec.predicted_cost_s(req, decode_only=True)
+    # prior yield (k+2)/2 = 2.5 -> ceil(12/2.5) = 5 verify rounds priced
+    # at the round latency, vs 12 single-token handoffs
+    assert c_spec == pytest.approx(
+        5 * protocol.speculative_verify_latency(3, 4))
+    assert c_plain == pytest.approx(12 * protocol.interthread_latency(4))
+    # the yield parameterization is live: a better-accepting engine
+    # (higher per-dispatch tokens) predicts proportionally fewer rounds
+    spec.engine.scheduler.record_spec_dispatch(4, 3, 3, 0.0)
+    assert spec.engine.decode_tokens_per_dispatch == pytest.approx(4.0)
+    assert spec.predicted_cost_s(req, decode_only=True) == pytest.approx(
+        3 * protocol.speculative_verify_latency(3, 4))

@@ -377,13 +377,38 @@ class RequestLeakRule(Rule):
     summary = ("a Request from i*-ops must reach wait/test/waitall on "
                "every path")
 
-    @staticmethod
-    def _is_issue(call: ast.Call) -> bool:
+    # hooks the span-leak rule overrides — the AST walk is identical,
+    # only the issue/completion vocabulary and the wording differ
+    _issue_attrs = _ISSUE_OPS
+    _ctor: Optional[str] = "Request"
+    _complete_attrs = _COMPLETE_OPS
+    _complete_fns = _COMPLETE_FNS
+    _noun = "Request"
+
+    def _is_issue(self, call: ast.Call) -> bool:
         if isinstance(call.func, ast.Attribute) \
-                and call.func.attr in _ISSUE_OPS:
+                and call.func.attr in self._issue_attrs:
             return True
+        if self._ctor is None:
+            return False
         c = _chain(call.func)
-        return c is not None and c.split(".")[-1] == "Request"
+        return c is not None and c.split(".")[-1] == self._ctor
+
+    def _msg_discard(self) -> str:
+        return ("Request discarded at the call site: the operation "
+                "is never completed — bind it and wait()/waitall() "
+                "(or testall in a progress loop)")
+
+    def _msg_leak(self, name: str) -> str:
+        return (f"Request bound to `{name}` is never completed: no "
+                "wait()/test()/waitall() reaches it in this "
+                "function and it does not escape")
+
+    def _msg_exception(self, name: str) -> str:
+        return (f"Requests bound to `{name}` are issued inside a try "
+                "body and only completed there: an exception mid-issue "
+                "abandons every request already in flight — move the "
+                "waitall/wait into the finally block")
 
     def check(self, tree, filename):
         out: List[Finding] = []
@@ -407,9 +432,7 @@ class RequestLeakRule(Rule):
             if isinstance(p, ast.Expr):
                 out.append(Finding(
                     filename, call.lineno, call.col_offset, self.name,
-                    "Request discarded at the call site: the operation "
-                    "is never completed — bind it and wait()/waitall() "
-                    "(or testall in a progress loop)"))
+                    self._msg_discard()))
                 return None
             if isinstance(p, ast.Assign) and len(p.targets) == 1 \
                     and isinstance(p.targets[0], ast.Name):
@@ -440,7 +463,7 @@ class RequestLeakRule(Rule):
                 aliases[node.target.id] = node.iter.id
             elif isinstance(node, ast.Call):
                 if isinstance(node.func, ast.Attribute) \
-                        and node.func.attr in _COMPLETE_OPS:
+                        and node.func.attr in self._complete_attrs:
                     if node.func.attr == "synchronize":
                         synchronized = True
                     base = node.func.value
@@ -448,7 +471,7 @@ class RequestLeakRule(Rule):
                         name = aliases.get(base.id, base.id)
                         completed.setdefault(name, []).append(node)
                 elif isinstance(node.func, ast.Name) \
-                        and node.func.id in _COMPLETE_FNS:
+                        and node.func.id in self._complete_fns:
                     for arg in node.args:
                         for n in ast.walk(arg):
                             if isinstance(n, ast.Name):
@@ -475,9 +498,9 @@ class RequestLeakRule(Rule):
                 fc = _chain(node.func)
                 is_completion = (
                     (isinstance(node.func, ast.Attribute)
-                     and node.func.attr in _COMPLETE_OPS)
+                     and node.func.attr in self._complete_attrs)
                     or (fc is not None
-                        and fc.split(".")[-1] in _COMPLETE_FNS))
+                        and fc.split(".")[-1] in self._complete_fns))
                 if is_completion:
                     continue
                 for arg in node.args:
@@ -492,9 +515,7 @@ class RequestLeakRule(Rule):
             for call in calls:
                 out.append(Finding(
                     filename, call.lineno, call.col_offset, self.name,
-                    f"Request bound to `{name}` is never completed: no "
-                    "wait()/test()/waitall() reaches it in this "
-                    "function and it does not escape"))
+                    self._msg_leak(name)))
         return out
 
     @staticmethod
@@ -523,11 +544,53 @@ class RequestLeakRule(Rule):
                 continue
             out.append(Finding(
                 filename, inside[0].lineno, inside[0].col_offset,
-                self.name,
-                f"Requests bound to `{name}` are issued inside a try "
-                "body and only completed there: an exception mid-issue "
-                "abandons every request already in flight — move the "
-                "waitall/wait into the finally block"))
+                self.name, self._msg_exception(name)))
+
+
+# ---------------------------------------------------------------------------
+# span-leak
+# ---------------------------------------------------------------------------
+
+_SPAN_ISSUE_OPS = frozenset({"span", "begin_span"})
+_SPAN_COMPLETE_OPS = frozenset({"end", "end_span"})
+
+
+class SpanLeakRule(RequestLeakRule):
+    """Same AST shape as request-leak, retargeted at the tracer's
+    manual span API (DESIGN.md §15): a handle from ``tr.span(...)`` /
+    ``tr.begin_span(...)`` bound to a local name must reach ``end()``
+    on every path. Context-manager use (``with tr.span(...):``) and
+    handles that escape (returned, stored on ``self``, passed on) are
+    exception-safe or owned elsewhere and never flagged — exactly the
+    request-leak escape semantics. A leaked span corrupts the tracer's
+    thread-local nesting stack, mis-parenting every later span on that
+    thread."""
+
+    name = "span-leak"
+    summary = ("a manually-bound tracer span must reach end() on every "
+               "path (or be opened as a context manager)")
+
+    _issue_attrs = _SPAN_ISSUE_OPS
+    _ctor = None
+    _complete_attrs = _SPAN_COMPLETE_OPS
+    _complete_fns = frozenset()
+    _noun = "Span"
+
+    def _msg_discard(self) -> str:
+        return ("Span discarded at the call site: it opens on the "
+                "tracer's stack and is never ended — use "
+                "`with tr.span(...):` or bind the handle and end() it")
+
+    def _msg_leak(self, name: str) -> str:
+        return (f"Span bound to `{name}` is never ended: no end() "
+                "reaches it in this function and it does not escape — "
+                "the tracer's nesting stack leaks")
+
+    def _msg_exception(self, name: str) -> str:
+        return (f"Spans bound to `{name}` are opened inside a try body "
+                "and only ended there: an exception leaves them on the "
+                "tracer's stack — move the end() into the finally "
+                "block (or use `with tr.span(...):`)")
 
 
 # ---------------------------------------------------------------------------
@@ -720,6 +783,7 @@ ALL_RULES: Tuple[Rule, ...] = (
     StateThreadRule(),
     DonatedUseRule(),
     RequestLeakRule(),
+    SpanLeakRule(),
     StreamOrderRule(),
     HostSyncRule(),
 )

@@ -34,6 +34,7 @@ them afterwards raises :class:`ThreadCommError`.
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -46,6 +47,9 @@ from jax.sharding import PartitionSpec as P
 # runtime threadcomm sanitizer (REPRO_SANITIZE=1, DESIGN.md §11): every
 # hook below is a single global read + None check when disabled
 from repro.analysis.sanitizer import active as _san_active
+# span tracer + stall detector (REPRO_TRACE=1, DESIGN.md §15) — the
+# same one-global-read-plus-None-check discipline when disabled
+from repro.obs.trace import active as _tr_active
 from repro.core import collectives as coll
 from repro.core import p2p as p2p_mod
 from repro.core import protocol
@@ -112,7 +116,16 @@ class Request:
         value = self._value
         leaves = jax.tree_util.tree_leaves(value)
         if not any(isinstance(l, jax.core.Tracer) for l in leaves):
-            jax.block_until_ready(value)   # host-level completion
+            tr = _tr_active()
+            if tr is None:
+                jax.block_until_ready(value)   # host-level completion
+            else:
+                # the completion point is where accidental serialization
+                # bites: time the block, and let the stall detector
+                # charge it when this thread had runnable work
+                t0 = time.perf_counter()
+                jax.block_until_ready(value)   # host-level completion
+                tr.on_wait(self.op, t0, time.perf_counter())
         return value
 
     def test(self) -> Tuple[bool, Optional[object]]:
@@ -162,12 +175,16 @@ class CommStream:
         self.name = name
         self._token = None
         self._requests: List[Request] = []
+        self._obs_span = None
 
     def __enter__(self) -> "CommStream":
         self.comm._root._check_active()
         san = _san_active()
         if san is not None:       # program order flows into the stream
             san.on_stream_enter(self)
+        tr = _tr_active()
+        if tr is not None:        # stream-region span, closed in __exit__
+            self._obs_span = tr.span(f"stream:{self.name}", cat="comm")
         self.comm._root._stream_stack.append(self)
         return self
 
@@ -175,6 +192,10 @@ class CommStream:
         stack = self.comm._root._stream_stack
         if stack and stack[-1] is self:
             stack.pop()
+        sp = self._obs_span
+        if sp is not None:
+            self._obs_span = None
+            sp.end()
         return False
 
     # ---- token plumbing (called by Comm.icollective) ----

@@ -23,7 +23,7 @@ trace through a single paged engine and through the router-dispatched
 fabric under each placement policy, recording aggregate tok/s, TTFT
 percentiles per policy, per-rank utilization, KV-migration pricing and
 greedy token identity (``BENCH_fabric.json``, schema
-``repro-serve-bench-v4``).
+``repro-serve-bench-v8``).
 
 CPU demo:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
@@ -49,6 +49,9 @@ import numpy as np
 from repro.config import ServeConfig, TrainConfig
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.models.registry import build_model, make_synthetic_batch
+from repro.obs import metrics as obs_metrics
+from repro.obs import residuals as obs_residuals
+from repro.obs import trace as obs_trace
 from repro.serve import (ContinuousEngine, ServeRequest, ServingFabric,
                          StaticEngine, make_trace)
 
@@ -144,19 +147,40 @@ def _drive_wall_clock(target, requests: List[ServeRequest]) -> float:
     return time.perf_counter() - t0
 
 
+def _attach_telemetry(stats: Dict) -> None:
+    """When the tracer is live (``REPRO_TRACE=1``), stamp the trial's
+    residual report, flat per-hop ratios, and the serialization-stall
+    total onto the stats dict. The capture is trial-clean because every
+    warm-up boundary (``engine.reset`` / ``fabric.close``) flushes the
+    ledger before the measured drive starts."""
+    tr = obs_trace.active()
+    if tr is None:
+        return
+    rep = tr.residuals.report()
+    stats["residual_report"] = rep
+    for kind, row in rep["hops"].items():
+        if row["n"]:
+            stats[f"residual_{kind}_ratio"] = row["ratio"]
+    stats["serialization_stall_s"] = rep["serialization_stall_s"]
+
+
 def drive_continuous(eng: ContinuousEngine, requests: List[ServeRequest]
                      ) -> Dict[str, float]:
-    """Wall-clock traffic loop through one continuous engine."""
+    """Wall-clock traffic loop through one continuous engine. Stats come
+    from the one merged surface (:func:`repro.obs.metrics.snapshot`):
+    latency percentiles, KV/prefix/spec accounting, and — when the
+    registry is live — its counters/gauges/histograms."""
     makespan = _drive_wall_clock(eng, requests)
     toks = sum(useful_tokens(r.output[:r.generated], eng.eos_id)
                for r in requests)
-    stats = eng.scheduler.latency_stats()
+    stats = obs_metrics.snapshot(engine=eng)
     stats.update(makespan_s=makespan, useful_tokens=float(toks),
                  tok_s=toks / makespan,
                  eager_admits=float(eng.scheduler.n_eager_admits),
                  deferred=float(eng.scheduler.n_deferred),
                  modeled_admit_cost_us=1e6
                  * eng.scheduler.modeled_admit_cost_s)
+    _attach_telemetry(stats)
     return stats
 
 
@@ -223,9 +247,10 @@ def drive_fabric(fab: ServingFabric, requests: List[ServeRequest]
     makespan = _drive_wall_clock(fab, requests)
     eos = fab.workers[0].engine.eos_id
     toks = sum(useful_tokens(r.output[:r.generated], eos) for r in requests)
-    stats = fab.stats()
+    stats = obs_metrics.snapshot(extra=fab.stats())
     stats.update(makespan_s=makespan, useful_tokens=float(toks),
                  tok_s=toks / makespan)
+    _attach_telemetry(stats)
     return stats
 
 
@@ -257,7 +282,7 @@ def run_fabric(arch: str = "gemma-2b", *, smoke: bool = True,
                seed: int = 0, prefill_chunk: int = 64,
                max_prefill_per_step: int = 2, block_size: int = 16,
                placements=("replicated", "disagg"),
-               n_prefill_ranks: int = 1) -> Dict:
+               n_prefill_ranks: int = 1, speculate: int = 0) -> Dict:
     """Fabric-vs-single comparison (DESIGN.md §10): drive the same
     arrival trace through a single paged ``ContinuousEngine`` and then
     through an N-rank :class:`ServingFabric` under each requested
@@ -312,13 +337,23 @@ def run_fabric(arch: str = "gemma-2b", *, smoke: bool = True,
 
     # -- fabric runs, one per placement policy --
     for placement in placements:
+        # speculative fabric ranks are replicated-only (a disaggregated
+        # decode rank imports leases the verify pool cannot host) and
+        # greedy-only; PR 9's token-identity guarantee keeps the spec
+        # replicated fabric comparable to the non-spec single baseline
+        spec_k = (speculate if (placement == "replicated"
+                                and temperature == 0.0
+                                and model.verify_step_paged is not None)
+                  else 0)
+        result[f"fabric_speculate_k_{placement}"] = spec_k
         fab = ServingFabric(model, params, ranks=ranks,
                             placement=placement, cache_len=cache_len,
                             slots_per_rank=slots, eos_id=eos_id,
                             prefill_chunk=prefill_chunk,
                             max_prefill_per_step=max_prefill_per_step,
                             block_size=block_size,
-                            n_prefill_ranks=n_prefill_ranks)
+                            n_prefill_ranks=n_prefill_ranks,
+                            speculate=spec_k)
         try:
             _warm_fabric(fab, cfg, dtype=dtype, seed=seed,
                          prompt_len=plens[0])
@@ -736,6 +771,52 @@ def run_traffic(arch: str = "gemma-2b", *, smoke: bool = True,
     return result
 
 
+def _collect_reports(obj) -> List[dict]:
+    """Every sub-run residual report nested anywhere in a payload (the
+    drivers stamp one per measured trial)."""
+    reps: List[dict] = []
+    if isinstance(obj, dict):
+        rep = obj.get("residual_report")
+        if isinstance(rep, dict):
+            reps.append(rep)
+        for v in obj.values():
+            if isinstance(v, (dict, list)):
+                reps.extend(_collect_reports(v))
+    elif isinstance(obj, list):
+        for v in obj:
+            reps.extend(_collect_reports(v))
+    return reps
+
+
+def _finalize_payload(payload: Dict) -> Dict:
+    """Schema v8: merge every sub-run's residual report into one
+    payload-level ``residual_report`` with flat ``residual_<hop>_ratio``
+    keys and the summed ``serialization_stall_s`` (all absent when
+    telemetry was off)."""
+    reps = _collect_reports(payload)
+    if reps:
+        merged = obs_residuals.merge_reports(reps)
+        payload["residual_report"] = merged
+        for kind, row in merged["hops"].items():
+            if row["n"]:
+                payload[f"residual_{kind}_ratio"] = row["ratio"]
+        payload["serialization_stall_s"] = merged["serialization_stall_s"]
+    return payload
+
+
+def _write_trace(path) -> None:
+    """``--trace-out``: export the tracer's ring as Chrome trace_event
+    JSON (Perfetto / chrome://tracing)."""
+    if not path:
+        return
+    tr = obs_trace.active()
+    if tr is None:
+        print(f"--trace-out {path}: tracing is off (set REPRO_TRACE=1)")
+        return
+    tr.write_chrome(path)
+    print(f"wrote {path} ({tr.n_events} events, {tr.dropped} dropped)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b", choices=list(ARCH_NAMES))
@@ -789,6 +870,10 @@ def main():
                     help="engine ranks in the serving fabric")
     ap.add_argument("--prefill-ranks", type=int, default=1,
                     help="dedicated prefill ranks (disaggregated fabric)")
+    ap.add_argument("--fabric-speculate", type=int, default=0,
+                    help="draft tokens per draft-verify round on the "
+                         "fabric's replicated ranks (0 = off; greedy "
+                         "traces only, replicated placement only)")
     ap.add_argument("--max-new-lo", type=int, default=4)
     ap.add_argument("--max-new-hi", type=int, default=32)
     ap.add_argument("--arrival", default="poisson",
@@ -803,6 +888,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write measurements (e.g. BENCH_serve.json)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the telemetry ring as Chrome trace_event "
+                         "JSON for Perfetto (needs REPRO_TRACE=1)")
     args = ap.parse_args()
 
     plens = [int(x) for x in str(args.prompt_len).split(",") if x]
@@ -829,10 +917,12 @@ def main():
                   f"state_bytes/slot {row['state_bytes_per_slot']}  "
                   f"token_identical={row['static_tok_identical']}")
         if args.json:
-            payload = {"schema": "repro-serve-bench-v7", "families": rows}
+            payload = _finalize_payload(
+                {"schema": "repro-serve-bench-v8", "families": rows})
             with open(args.json, "w") as f:
                 json.dump(payload, f, indent=1)
             print(f"wrote {args.json}")
+        _write_trace(args.trace_out)
         return
 
     if args.fabric != "off":
@@ -848,7 +938,8 @@ def main():
             seed=args.seed, prefill_chunk=args.prefill_chunk,
             max_prefill_per_step=args.max_prefill_per_step,
             block_size=args.kv_block_size, placements=placements,
-            n_prefill_ranks=args.prefill_ranks)
+            n_prefill_ranks=args.prefill_ranks,
+            speculate=args.fabric_speculate)
         print(f"arch={result['arch']} requests={result['requests']} "
               f"ranks={result['ranks']} slots/rank="
               f"{result['slots_per_rank']} prompt_len="
@@ -881,10 +972,12 @@ def main():
                   f"speedup_vs_single[{p}]="
                   f"{result.get(f'speedup_vs_single_{p}', 0.0):.2f}x")
         if args.json:
-            payload = {"schema": "repro-serve-bench-v4", **result}
+            payload = _finalize_payload(
+                {"schema": "repro-serve-bench-v8", **result})
             with open(args.json, "w") as f:
                 json.dump(payload, f, indent=1)
             print(f"wrote {args.json}")
+        _write_trace(args.trace_out)
         return
 
     result = run_traffic(
@@ -967,10 +1060,12 @@ def main():
               f"paged={result.get('parity_token_identical_paged')} "
               f"(prompt_len={result.get('parity_prompt_len')})")
     if args.json:
-        payload = {"schema": "repro-serve-bench-v7", **result}
+        payload = _finalize_payload(
+            {"schema": "repro-serve-bench-v8", **result})
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"wrote {args.json}")
+    _write_trace(args.trace_out)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,45 @@
+"""Serving-fabric observability (DESIGN.md §15): span tracing, metrics
+registry, and modeled-vs-measured cost residuals.
+
+Off by default and compiled out of the hot path when off — every
+instrumented site is one module-global read plus a ``None`` check, the
+sanitizer's pattern (DESIGN.md §11). ``REPRO_TRACE=1`` (or
+:func:`install`) turns on the whole subsystem: the span tracer
+(:mod:`repro.obs.trace`), the push-metrics registry
+(:mod:`repro.obs.metrics`), and the residual ledger the tracer owns
+(:mod:`repro.obs.residuals`).
+"""
+
+from __future__ import annotations
+
+from repro.obs import metrics, residuals, trace
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.residuals import ResidualLedger, merge_reports
+from repro.obs.trace import Span, Tracer
+
+
+def install(capacity: int = trace.DEFAULT_CAPACITY) -> Tracer:
+    """Turn on the full subsystem (tracer + registry); returns the
+    tracer. Equivalent to launching under ``REPRO_TRACE=1``."""
+    metrics.install()
+    return trace.install(capacity=capacity)
+
+
+def uninstall() -> None:
+    trace.uninstall()
+    metrics.uninstall()
+
+
+def flush_trial() -> None:
+    """Trial-boundary flush (residual ledger + push registry); wired
+    into ``ContinuousEngine.reset`` and ``ServingFabric.close`` so warm
+    trials never aggregate into measured ones. No-op when off."""
+    trace.flush_trial()
+    metrics.flush_trial()
+
+
+__all__ = [
+    "MetricsRegistry", "ResidualLedger", "Span", "Tracer",
+    "flush_trial", "install", "merge_reports", "metrics", "residuals",
+    "trace", "uninstall",
+]

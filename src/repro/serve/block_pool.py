@@ -42,6 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.sanitizer import active as _san_active
+from repro.obs.metrics import active as _reg_active
+from repro.obs.trace import active as _tr_active
 from repro.serve.kv_cache import LeaseLeakError, LeaseLeakWarning, SlotError
 
 
@@ -115,6 +117,7 @@ class BlockPool:
         san = _san_active()
         if san is not None:       # lease ledger records the alloc site
             san.on_lease_alloc(self, blocks, owner)
+        self._observe_occupancy()
         return blocks
 
     def ref(self, block: int, owner: object = None) -> None:
@@ -152,6 +155,23 @@ class BlockPool:
                 self._reclaimer.on_sole_ref(b)
             if san is not None:
                 san.on_lease_release(self, b)
+        self._observe_occupancy()
+
+    def _observe_occupancy(self) -> None:
+        """Telemetry (DESIGN.md §15): block-pool occupancy as a Perfetto
+        counter track + a registry gauge, sampled at lease transitions
+        (per request admission/finish, not per token — alloc/free are
+        the only places occupancy moves)."""
+        tr = _tr_active()
+        if tr is not None:
+            free = len(self._free)
+            tr.counter("block_pool", free=free,
+                       live=self.num_blocks - free)
+        reg = _reg_active()
+        if reg is not None:
+            reg.gauge("block_pool.free_blocks").set(len(self._free))
+            reg.gauge("block_pool.live_blocks").set(
+                self.num_blocks - len(self._free))
 
     def reset(self, *, strict: bool = False) -> None:
         """Wipe every lease. Blocks still live are leaks — requests that

@@ -63,6 +63,7 @@ Threadcomm integration:
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass
 from typing import Deque, List, Optional
@@ -72,6 +73,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import protocol
+# telemetry (REPRO_TRACE=1, DESIGN.md §15): micro-step spans, admission
+# residual hops, trial flush — one global read + None check when off
+from repro.obs import flush_trial as _obs_flush_trial
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import active as _tr_active
 from repro.serve.block_pool import PagedKVCache
 from repro.serve.kv_cache import SlotError, SlotKVCache
 from repro.serve.prefix_cache import PrefixCache
@@ -792,6 +798,11 @@ class ContinuousEngine:
         a single dispatch on the chunked path), then advance every
         decoding slot by one token. Returns the requests that finished
         this step."""
+        tr = _tr_active()
+        if tr is not None:
+            # runnable-work hint for the serialization-stall detector:
+            # rows + queued requests this engine could be advancing
+            tr.set_runnable(self.kv.num_live + self.scheduler.num_waiting)
         finished: List[ServeRequest] = []
         if self.prefill_chunk:
             # admission keeps at most max_prefill_per_step prompts
@@ -815,19 +826,57 @@ class ContinuousEngine:
                 admitted = self.scheduler.admit(now, 1, can_admit=can)
                 if not admitted:
                     break
-                self._begin_prefill(admitted[0])
+                req = admitted[0]
+                if tr is None:
+                    self._begin_prefill(req)
+                else:
+                    # the admission hop's wall-clock twin of the §3.2
+                    # price stamped on the request (repriced to the
+                    # prefix-hit model when the radix cache served it)
+                    t0 = time.perf_counter()
+                    self._begin_prefill(req)
+                    tr.hop("prefix_hit" if req.prefix_hit_tokens > 0
+                           else "admission", req.admit_cost_s, t0,
+                           time.perf_counter(), rid=req.rid)
                 budget -= 1
             if self._prefilling:
-                finished.extend(self._prefill_chunk_step(now))
+                if tr is None:
+                    finished.extend(self._prefill_chunk_step(now))
+                else:
+                    nj = min(len(self._prefilling),
+                             self.max_prefill_per_step)
+                    t0 = time.perf_counter()
+                    finished.extend(self._prefill_chunk_step(now))
+                    tr.complete("prefill_chunk", t0, time.perf_counter(),
+                                cat="engine", jobs=nj)
         else:
             n_admit = min(self.kv.num_free, self.max_prefill_per_step)
             for req in self.scheduler.admit(now, n_admit):
-                done = self._admit(req, now)
+                if tr is None:
+                    done = self._admit(req, now)
+                else:
+                    t0 = time.perf_counter()
+                    done = self._admit(req, now)
+                    tr.hop("admission", req.admit_cost_s, t0,
+                           time.perf_counter(), rid=req.rid)
                 if done is not None:
                     finished.append(done)
         if self.num_decoding:
-            finished.extend(self._spec_micro_step(now) if self.speculate
-                            else self._decode_micro_step(now))
+            if tr is None:
+                finished.extend(self._spec_micro_step(now)
+                                if self.speculate
+                                else self._decode_micro_step(now))
+            elif self.speculate:
+                t0 = time.perf_counter()
+                finished.extend(self._spec_micro_step(now))
+                tr.complete("spec_round", t0, time.perf_counter(),
+                            cat="engine")
+            else:
+                rows = self.num_decoding
+                t0 = time.perf_counter()
+                finished.extend(self._decode_micro_step(now))
+                tr.complete("decode", t0, time.perf_counter(),
+                            cat="engine", rows=rows)
         self._account()
         return finished
 
@@ -851,51 +900,15 @@ class ContinuousEngine:
                 if self.kv_layout == "paged" else live * self.cache_len)
 
     def kv_accounting(self) -> dict:
-        """HBM-efficiency evidence for the traffic driver: total pool
-        bytes, bytes pinned per resident token (time-averaged over
-        non-idle steps), and peak concurrent in-flight requests."""
-        if self.kv_layout == "paged":
-            total = self.kv.kv_bytes
-            cap_tokens = self.kv.capacity_tokens
-        else:
-            total = int(sum(x.nbytes for x in
-                            jax.tree_util.tree_leaves(self.kv.buffers)))
-            cap_tokens = self.kv.num_slots * self.cache_len
-        per_tok = total / max(1, cap_tokens)
-        resident = max(1, self._resident_tok_sum)
-        return {
-            "kv_layout": self.kv_layout,
-            "kv_bytes_total": float(total),
-            "kv_capacity_tokens": float(cap_tokens),
-            "kv_bytes_per_token": per_tok,
-            # reserved/resident > 1 is over-reservation: HBM pinned for
-            # tokens that are not there (the slot pool's cache_len rounding)
-            "kv_reserved_over_resident": self._reserved_tok_sum / resident,
-            "kv_bytes_per_resident_token":
-                per_tok * self._reserved_tok_sum / resident,
-            "peak_concurrent": float(self.peak_live),
-        }
+        """Thin alias — the canonical schema lives in
+        :func:`repro.obs.metrics.engine_kv_accounting` (DESIGN.md §15),
+        so every stats surface is assembled in one place."""
+        return obs_metrics.engine_kv_accounting(self)
 
     def prefix_stats(self) -> dict:
-        """Prefix-cache evidence for BENCH_serve (empty when the cache
-        is off): hit rate in *tokens* (hit tokens over prompt tokens
-        seen), prefill work saved, CoW/eviction counts, and the modeled
-        hit-path cost (``protocol.prefix_hit_latency``)."""
-        pc = self.prefix_cache
-        if pc is None:
-            return {}
-        return {
-            "prefix_lookups": float(self.prefix_lookups),
-            "prefix_hits": float(self.prefix_hits),
-            "prefix_hit_rate": (self.prefix_hit_tokens
-                                / max(1, self.prefix_prompt_tokens)),
-            "prefill_tokens_saved": float(self.prefix_hit_tokens),
-            "prefill_dispatches_saved": float(self.prefill_dispatches_saved),
-            "prefix_cow_clones": float(self.prefix_cow_clones),
-            "prefix_modeled_hit_cost_us":
-                1e6 * self.scheduler.modeled_prefix_hit_cost_s,
-            **pc.stats(),
-        }
+        """Thin alias — canonical schema:
+        :func:`repro.obs.metrics.engine_prefix_stats`."""
+        return obs_metrics.engine_prefix_stats(self)
 
     @property
     def decode_tokens_per_dispatch(self) -> float:
@@ -913,13 +926,9 @@ class ContinuousEngine:
         return (self.speculate + 2) / 2
 
     def spec_stats(self) -> dict:
-        """Speculative-decoding evidence for BENCH_serve (empty when
-        speculation is off): per-dispatch acceptance and the modeled
-        §3.2 round cost the scheduler aggregated."""
-        if not self.speculate:
-            return {}
-        return {"speculate_k": float(self.speculate),
-                **self.scheduler.spec_stats()}
+        """Thin alias — canonical schema:
+        :func:`repro.obs.metrics.engine_spec_stats`."""
+        return obs_metrics.engine_spec_stats(self)
 
     # -- chunked prompt deposit (rendezvous-style streaming) ---------------
     def _begin_prefill(self, req: ServeRequest) -> None:
@@ -1205,6 +1214,8 @@ class ContinuousEngine:
             tpos[slot] = canon - 1
             n_draft[slot] = min(k, req.max_new_tokens - g - 1)
             live.append(slot)
+        tr = _tr_active()
+        t_disp = time.perf_counter() if tr is not None else 0.0
         greedy, n_emit, buf, dbuf = self._spec_round(
             self.params, self.draft_params, self.kv.buffers,
             self.draft_kv.buffers, jnp.asarray(cur), jnp.asarray(prev),
@@ -1217,6 +1228,11 @@ class ContinuousEngine:
         n_emit_np = np.asarray(n_emit)
 
         cost = protocol.speculative_verify_latency(k)
+        if tr is not None:
+            # the round's modeled price is per live row; the measured
+            # twin is the fused dispatch + its one host sync
+            tr.hop("spec_verify", cost * max(1, len(live)), t_disp,
+                   time.perf_counter(), rows=len(live), k=k)
         finished: List[ServeRequest] = []
         for slot in live:
             req = self._slot_req[slot]
@@ -1353,6 +1369,13 @@ class ContinuousEngine:
         self.prefill_dispatches_saved = self.prefix_cow_clones = 0
         if self.prefix_cache is not None:
             self.prefix_cache.reset_stats()
+        # the telemetry subsystem is trial-scoped too: residual pairs and
+        # push-registry observations recorded during warm-up (compile-
+        # dominated, wildly off-model) must not aggregate into the
+        # measured trial — the PR 5 req_log aliasing class, one layer up.
+        # Applies to BOTH reset flavors: preserve_prefix=True keeps the
+        # radix index warm but the trial's measurements still restart.
+        _obs_flush_trial()
 
     # -- batch-API convenience (parity with StaticEngine.generate) --------
     def generate(self, batch, max_new_tokens: int, *,

@@ -30,6 +30,7 @@ eligible (:mod:`~repro.serve.fabric.placement`):
 
 from __future__ import annotations
 
+import time
 import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional
@@ -39,6 +40,11 @@ import numpy as np
 
 from repro.core.comm import ThreadComm, threadcomm_init
 from repro.core.compat import make_mesh
+# telemetry (REPRO_TRACE=1, DESIGN.md §15): dispatch/migrate hop spans
+# with modeled-vs-measured residuals — one global read + None check off
+from repro.obs import flush_trial as _obs_flush_trial
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import active as _tr_active
 from repro.serve.engine import ContinuousEngine
 from repro.serve.kv_cache import LeaseLeakError, LeaseLeakWarning
 from repro.serve.fabric.placement import Placement, make_placement
@@ -67,6 +73,7 @@ class ServingFabric:
                  blocks_per_rank: Optional[int] = None,
                  n_prefill_ranks: int = 1,
                  dispatch_window: Optional[int] = None,
+                 speculate: int = 0,
                  comm: Optional[ThreadComm] = None):
         self.placement: Placement = (placement if isinstance(placement,
                                                              Placement)
@@ -74,6 +81,17 @@ class ServingFabric:
                                                          n_prefill_ranks))
         roles = self.placement.roles(ranks)
         self.ranks = int(ranks)
+        # speculative ranks (DESIGN.md §14 on the fabric): every rank of
+        # a replicated placement runs draft–verify rounds. Disaggregated
+        # placement is refused up front — the drafter's twin pool never
+        # sees the prompt KV a migration ships, so a decode rank could
+        # not draft (the engine enforces role == "full" too)
+        self.speculate = int(speculate)
+        if self.speculate and self.placement.needs_migration:
+            raise ValueError(
+                "speculative decoding is not supported on disaggregated "
+                "placements: the drafter's twin pool cannot receive the "
+                "migrated prompt KV (use placement='replicated')")
 
         # capability gate (DESIGN.md §13): disaggregation migrates KV
         # blocks between ranks, which silently strands any per-request
@@ -114,7 +132,8 @@ class ServingFabric:
                 prefill_chunk=prefill_chunk,
                 max_prefill_per_step=max_prefill_per_step,
                 kv_layout="paged", block_size=block_size,
-                num_blocks=blocks_per_rank, role=role)
+                num_blocks=blocks_per_rank, role=role,
+                speculate=self.speculate if role == "full" else 0)
             self.workers.append(EngineWorker(i, role, eng, comm=subs[i]))
 
         # -- the dispatch hop's admission queue (router rank) --
@@ -180,14 +199,27 @@ class ServingFabric:
     def _dispatch(self, now: float) -> None:
         """Deal queued requests join-shortest-queue to eligible ranks,
         stopping at the dispatch window (bounded per-rank backlog)."""
+        tr = _tr_active()
         while True:
             w = self.placement.select_submit(self.workers)
             if w is None or w.queue_depth >= self.dispatch_window:
                 return
-            admitted = self.scheduler.admit(now, 1)
-            if not admitted:
-                return
-            w.submit(admitted[0], now)
+            if tr is None:
+                admitted = self.scheduler.admit(now, 1)
+                if not admitted:
+                    return
+                w.submit(admitted[0], now)
+            else:
+                # the router-dispatch hop's wall-clock twin of the §3.2
+                # admission price stamped at this hop's scheduler
+                t0 = time.perf_counter()
+                admitted = self.scheduler.admit(now, 1)
+                if not admitted:
+                    return
+                w.submit(admitted[0], now)
+                tr.hop("router_dispatch", admitted[0].admit_cost_s, t0,
+                       time.perf_counter(), rid=admitted[0].rid,
+                       rank=w.rank)
 
     # -- the migrate hop (disaggregated only) ------------------------------
     def _migrate(self, now: float) -> None:
@@ -210,6 +242,8 @@ class ServingFabric:
                     held.extend(pending[i:])   # FIFO: defer the rest too
                     break
                 slot = None
+                tr = _tr_active()
+                t0 = time.perf_counter() if tr is not None else 0.0
                 try:
                     slot, dst_blocks = d.engine.begin_import(h.req)
                     state_row = w.engine.handoff_state(h.slot)
@@ -217,6 +251,13 @@ class ServingFabric:
                         w.engine.kv, d.engine.kv, h.blocks,
                         dst_blocks[:len(h.blocks)])
                     d.engine.finish_import(slot, h, state_row, now)
+                    if tr is not None:
+                        # the migrate hop's wall-clock twin: posted
+                        # receive + block messages + waitall + install
+                        tr.hop("migration", cost, t0,
+                               time.perf_counter(), rid=h.req.rid,
+                               src=w.rank, dst=d.rank,
+                               blocks=len(h.blocks))
                 except BaseException:
                     # an error mid-migration must not lose in-flight
                     # requests: undo the posted receive and put this
@@ -244,6 +285,12 @@ class ServingFabric:
         Dispatch and migration stay on the router thread: they read and
         write cross-rank state (JSQ loads, block leases on two pools),
         while a rank's micro-step touches only its own."""
+        tr = _tr_active()
+        if tr is not None:
+            # router-thread runnable hint: queued requests the router
+            # could be dispatching — time it then spends blocked inside
+            # a migrate waitall is measured serialization (paper §2)
+            tr.set_runnable(self.scheduler.num_waiting)
         self._dispatch(now)
         finished: List[ServeRequest] = []
         if self._rank_pool is not None:
@@ -271,25 +318,15 @@ class ServingFabric:
         admission accounting, per-rank utilization rows, and (disagg)
         the KV-migration rows."""
         out = latency_stats_over(self.finished)
-        log = self.scheduler.req_log
         out.update(
             placement=self.placement.name,
             ranks=float(self.ranks),
             fabric_steps=float(self.total_steps),
-            router_eager_admits=float(self.scheduler.n_eager_admits),
-            router_deferred=float(self.scheduler.n_deferred),
-            router_dispatch_cost_us=1e6
-            * self.scheduler.modeled_admit_cost_s,
-            # trial-scoped census from the dispatch hop's rid-keyed
-            # accounting map: everything submitted this trial, what is
-            # still somewhere in the fabric, and the arrival window
-            router_submitted=float(len(log)),
-            router_in_flight=float(sum(1 for r in log.values()
-                                       if r.state != "done")),
         )
-        if log:
-            arr = [r.arrival for r in log.values()]
-            out["arrival_span_s"] = max(arr) - min(arr)
+        # trial-scoped census + admission accounting of the dispatch
+        # hop, and the per-rank rows — both assembled by the canonical
+        # schema collectors (repro.obs.metrics, DESIGN.md §15)
+        out.update(obs_metrics.scheduler_census(self.scheduler))
         out["per_rank"] = [w.utilization() for w in self.workers]
         if self.transport is not None:
             out.update(self.transport.stats())
@@ -356,3 +393,19 @@ class ServingFabric:
                 self.comm.finish()
                 self.comm.free()
                 self._owns_comm = False
+            # per-trial counters are trial-scoped, and a closed fabric
+            # ends the trial: drop the router's rid-keyed log/admission
+            # accounting and the transport's migration counters (rids
+            # restart at 0 next trial — the PR 5 req_log aliasing bug
+            # class), and flush the global telemetry (residual ledger +
+            # push registry) so nothing recorded here aggregates into a
+            # later trial in the same process. Worker/engine counters
+            # stay readable until their own reset(): close() must not
+            # re-run the engines' lease-leak census the try block above
+            # already reported.
+            self.scheduler.reset()
+            if self.transport is not None:
+                self.transport.reset()
+            self.finished = []
+            self.total_steps = 0
+            _obs_flush_trial()

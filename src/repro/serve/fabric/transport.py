@@ -30,6 +30,7 @@ traffic.
 
 from __future__ import annotations
 
+import time
 from typing import List
 
 import jax
@@ -38,6 +39,7 @@ import jax.numpy as jnp
 from repro.analysis.sanitizer import active as _san_active
 from repro.core import protocol
 from repro.core.comm import Request, waitall
+from repro.obs.trace import active as _tr_active
 
 
 class KVBlockTransport:
@@ -105,6 +107,8 @@ class KVBlockTransport:
         san = _san_active()
         if san is not None:
             san.on_migrate_begin(self, len(src_blocks))
+        tr = _tr_active()
+        t_xfer = time.perf_counter() if tr is not None else 0.0
         # the first hop donates the live destination pool, so from here
         # on dst_kv MUST end up pointing at the freshest chain value
         # whatever happens — on an error mid-chain or at completion the
@@ -144,6 +148,12 @@ class KVBlockTransport:
         # its per-block message price — the Request.model_overhead_s
         # fields are the per-message view of the same cost, not an add-on
         cost = protocol.kv_migration_latency(moved * nb, nb)
+        if tr is not None:
+            # the pure block-transfer span; it nests (by timestamp
+            # containment) inside the router's hop:migration event,
+            # which also covers the lease import bookkeeping
+            tr.complete("kv_transfer", t_xfer, time.perf_counter(),
+                        cat="fabric", blocks=moved)
         self.n_migrations += 1
         self.n_blocks_moved += moved
         self.bytes_moved += moved * nb

@@ -16,6 +16,11 @@ from __future__ import annotations
 from typing import Dict, List
 
 from repro.core import protocol
+# telemetry (REPRO_TRACE=1, DESIGN.md §15): each rank step runs inside a
+# rank scope so every span a pool thread emits lands on the right
+# Perfetto lane (threads are re-assigned to ranks arbitrarily per step)
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import active as _tr_active
 from repro.serve.engine import ContinuousEngine
 from repro.serve.scheduler import ServeRequest
 
@@ -134,7 +139,14 @@ class EngineWorker:
     # -- micro-step --------------------------------------------------------
     def step(self, now: float = 0.0) -> List[ServeRequest]:
         busy = not self.idle
-        finished = self.engine.step(now)
+        tr = _tr_active()
+        if tr is None:
+            finished = self.engine.step(now)
+        else:
+            with tr.rank_scope(self.rank), \
+                    tr.span("rank_step", cat="fabric", rank=self.rank,
+                            role=self.role, busy=busy):
+                finished = self.engine.step(now)
         self.total_steps += 1
         self.busy_steps += int(busy)
         self.n_finished += len(finished)
@@ -145,23 +157,9 @@ class EngineWorker:
 
     # -- reporting ---------------------------------------------------------
     def utilization(self) -> dict:
-        """One per-rank row of the fabric bench artifact."""
-        return {
-            "rank": self.rank,
-            "role": self.role,
-            "steps": float(self.total_steps),
-            "busy_steps": float(self.busy_steps),
-            "utilization": (self.busy_steps / self.total_steps
-                            if self.total_steps else 0.0),
-            "dispatched": float(self.n_dispatched),
-            "migrated_in": float(self.n_migrated_in),
-            "migrated_out": float(self.n_migrated_out),
-            "finished": float(self.n_finished),
-            "tokens": float(self.tokens_out),
-            # residual predicted work (0 after a drained trial) — the
-            # JSQ key the router was balancing on
-            "predicted_load_s": float(self._load_s),
-        }
+        """Thin alias — the canonical per-rank row schema lives in
+        :func:`repro.obs.metrics.worker_utilization` (DESIGN.md §15)."""
+        return obs_metrics.worker_utilization(self)
 
     def reset(self) -> None:
         """Post-warm-up clean slate: engine state AND rank accounting

@@ -256,6 +256,105 @@ def test_request_leak_disabled():
 
 
 # ---------------------------------------------------------------------------
+# span-leak
+# ---------------------------------------------------------------------------
+
+SPAN_BAD = """
+    def rank_step(tr, engine):
+        sp = tr.span("rank_step")
+        return engine.step()
+"""
+
+SPAN_GOOD_END = """
+    def rank_step(tr, engine):
+        sp = tr.span("rank_step")
+        out = engine.step()
+        sp.end()
+        return out
+"""
+
+SPAN_GOOD_WITH = """
+    def rank_step(tr, engine):
+        with tr.span("rank_step"):
+            return engine.step()
+"""
+
+SPAN_GOOD_ATTR = """
+    def enter(self, tr):
+        self._obs_span = tr.span("stream")
+"""
+
+SPAN_DISCARDED = """
+    def rank_step(tr, engine):
+        tr.span("rank_step")
+        return engine.step()
+"""
+
+SPAN_EXC_PATH = """
+    def rank_step(tr, engine):
+        try:
+            sp = tr.span("rank_step")
+            out = engine.step()
+            sp.end()
+        finally:
+            cleanup()
+        return out
+"""
+
+SPAN_EXC_GOOD = """
+    def rank_step(tr, engine):
+        try:
+            sp = tr.span("rank_step")
+            out = engine.step()
+        finally:
+            sp.end()
+        return out
+"""
+
+
+def test_span_leak_positive():
+    assert _rules_hit(SPAN_BAD) == ["span-leak"]
+
+
+def test_span_leak_discarded_at_call_site():
+    assert _rules_hit(SPAN_DISCARDED) == ["span-leak"]
+
+
+def test_span_leak_end_completes():
+    assert _rules_hit(SPAN_GOOD_END) == []
+
+
+def test_span_leak_with_form_safe():
+    assert _rules_hit(SPAN_GOOD_WITH) == []
+
+
+def test_span_leak_attribute_escape_safe():
+    # stored on self: the owner (e.g. CommStream.__exit__) ends it
+    assert _rules_hit(SPAN_GOOD_ATTR) == []
+
+
+def test_span_leak_exception_path():
+    # end() inside the try body does not cover the exception path
+    hits = _lint(SPAN_EXC_PATH)
+    assert [f.rule for f in hits] == ["span-leak"]
+    assert "finally" in hits[0].message
+
+
+def test_span_leak_exception_path_fixed():
+    assert _rules_hit(SPAN_EXC_GOOD) == []
+
+
+def test_span_leak_pragma():
+    src = SPAN_BAD.replace('tr.span("rank_step")',
+                           'tr.span("rank_step")  # lint: ok[span-leak]')
+    assert _rules_hit(src) == []
+
+
+def test_span_leak_disabled():
+    assert _rules_hit(SPAN_BAD, rules=_other_rules("span-leak")) == []
+
+
+# ---------------------------------------------------------------------------
 # stream-order
 # ---------------------------------------------------------------------------
 
@@ -384,7 +483,7 @@ def test_syntax_error_is_a_finding():
 def test_rule_registry_complete():
     assert set(RULES_BY_NAME) == {"scatter-drop", "state-thread",
                                   "donated-use", "request-leak",
-                                  "stream-order", "host-sync"}
+                                  "span-leak", "stream-order", "host-sync"}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,363 @@
+"""Telemetry subsystem (DESIGN.md §15): tracer span nesting and rank
+attribution under pool threads, ring-buffer overflow semantics, Chrome
+``trace_event`` export validity, the residual ledger + serialization-
+stall detector, the metrics registry, trial-flush wiring on engine
+reset / fabric close, and the inert-when-disabled contract (mirroring
+``test_sanitizer.py``: instrumented code pays one ``None`` check and
+nothing else when telemetry is off)."""
+
+import json
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import pytest
+
+from repro.config import ServeConfig, TrainConfig
+from repro.configs import get_smoke_config
+from repro.models.registry import build_model
+from repro.obs import metrics as M
+from repro.obs import residuals as R
+from repro.obs import trace as T
+from repro.serve import ContinuousEngine, ServingFabric
+
+
+@pytest.fixture
+def tracer():
+    tr = T.install(capacity=4096)
+    M.install()
+    yield tr
+    T.uninstall()
+    M.uninstall()
+
+
+@pytest.fixture
+def off():
+    """Force the disabled state (REPRO_TRACE=1 in the environment
+    auto-installs at import)."""
+    T.uninstall()
+    M.uninstall()
+    yield
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    cfg = get_smoke_config("gemma-2b")
+    train = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                        loss_chunk=16, attn_chunk_threshold=64,
+                        attn_chunk=16, remat=False)
+    model = build_model(cfg, train, ServeConfig(), tp=1)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# span nesting and rank attribution
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_parent_recorded(tracer):
+    with tracer.span("outer", cat="test"):
+        with tracer.span("inner", cat="test", k=1):
+            pass
+    by_name = {e["name"]: e for e in tracer.events()}
+    assert by_name["inner"]["args"]["parent"] == "outer"
+    assert "parent" not in by_name["outer"]["args"]
+    assert by_name["inner"]["ph"] == "X"
+    assert by_name["inner"]["dur"] >= 0.0
+    assert tracer.unbalanced == 0
+
+
+def test_complete_inherits_open_parent(tracer):
+    with tracer.span("outer"):
+        t0 = time.perf_counter()
+        tracer.complete("hot", t0, time.perf_counter())
+    ev = [e for e in tracer.events() if e["name"] == "hot"][0]
+    assert ev["args"]["parent"] == "outer"
+
+
+def test_manual_end_is_idempotent(tracer):
+    sp = tracer.span("once")
+    sp.end()
+    sp.end()
+    assert len([e for e in tracer.events() if e["name"] == "once"]) == 1
+    assert tracer.unbalanced == 0
+
+
+def test_out_of_order_end_counted_unbalanced(tracer):
+    a = tracer.span("a")
+    b = tracer.span("b")
+    a.end()              # LIFO violation: b is still open
+    b.end()
+    assert tracer.unbalanced == 1
+    assert len(tracer.events()) == 2
+
+
+def test_rank_attribution_under_pool_threads(tracer):
+    """Fabric shape: a ThreadPoolExecutor re-assigns threads to ranks
+    arbitrarily per step; rank_scope must pin every event to the rank,
+    and the thread-local stacks must never cross-corrupt."""
+    def one_step(rank, step):
+        with tracer.rank_scope(rank):
+            with tracer.span(f"step:{rank}", step=step):
+                with tracer.span(f"sub:{rank}"):
+                    time.sleep(0.0005)
+
+    with ThreadPoolExecutor(max_workers=3,
+                            thread_name_prefix="fabric-rank") as ex:
+        futs = [ex.submit(one_step, rank, step)
+                for step in range(8) for rank in range(4)]
+        for f in futs:
+            f.result()
+    assert tracer.unbalanced == 0
+    for ev in tracer.events():
+        kind, _, rank = ev["name"].partition(":")
+        assert ev["tid"] == int(rank)        # lane == rank, not thread
+        if kind == "sub":
+            assert ev["args"]["parent"] == f"step:{rank}"
+    # 4 ranks x 8 steps x 2 spans
+    assert len(tracer.events()) == 64
+
+
+def test_driver_lane_outside_rank_scope(tracer):
+    tracer.instant("driver_event")
+    ev = tracer.events()[0]
+    assert ev["tid"] >= T.DRIVER_TID
+    lanes = tracer.chrome_trace()["traceEvents"]
+    names = {m["tid"]: m["args"]["name"] for m in lanes
+             if m.get("ph") == "M" and m["name"] == "thread_name"}
+    assert ev["tid"] in names                # lane carries a thread name
+
+
+# ---------------------------------------------------------------------------
+# ring buffer
+# ---------------------------------------------------------------------------
+
+def test_ring_overflow_drops_oldest_first():
+    tr = T.Tracer(capacity=8)
+    for i in range(12):
+        tr.instant(f"ev{i}")
+    names = [e["name"] for e in tr.events()]
+    assert names == [f"ev{i}" for i in range(4, 12)]
+    assert tr.dropped == 4
+    assert tr.chrome_trace()["metadata"]["dropped_events"] == 4
+
+
+def test_ring_capacity_validated():
+    with pytest.raises(ValueError):
+        T.Tracer(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace_event export
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_valid_json(tracer, tmp_path):
+    with tracer.rank_scope(1):
+        with tracer.span("rank_step", cat="fabric"):
+            t0 = time.perf_counter()
+            tracer.complete("decode", t0, time.perf_counter(), rows=2)
+        tracer.counter("block_pool", free=3, live=5)
+    tracer.instant("admit", cat="sched", rid=0)
+    path = tmp_path / "trace.json"
+    tracer.write_chrome(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    assert {"name": "process_name", "ph": "M", "pid": 0, "tid": 0,
+            "args": {"name": "repro-serve"}} in evs
+    # rank lane named and sorted
+    assert any(m.get("ph") == "M" and m["name"] == "thread_name"
+               and m["tid"] == 1 and m["args"]["name"] == "rank 1"
+               for m in evs)
+    data = [e for e in evs if e.get("ph") != "M"]
+    assert [e["ts"] for e in data] == sorted(e["ts"] for e in data)
+    for e in data:
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(e)
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0
+
+
+def test_hop_emits_span_and_residual(tracer):
+    t0 = time.perf_counter()
+    time.sleep(0.001)
+    with tracer.rank_scope(2):
+        tracer.hop("migration", 0.5e-3, t0, time.perf_counter(), rid=7)
+    ev = [e for e in tracer.events() if e["name"] == "hop:migration"][0]
+    assert ev["cat"] == "residual"
+    assert ev["args"]["modeled_s"] == pytest.approx(0.5e-3)
+    assert ev["args"]["measured_s"] > 0.0
+    assert ev["args"]["residual_ratio"] == pytest.approx(
+        ev["args"]["measured_s"] / 0.5e-3)
+    assert ev["tid"] == 2
+    rep = tracer.residuals.report()
+    assert rep["hops"]["migration"]["n"] == 1
+
+
+# ---------------------------------------------------------------------------
+# residual ledger + serialization-stall detector
+# ---------------------------------------------------------------------------
+
+def test_residual_report_flags_over_factor():
+    led = R.ResidualLedger()
+    led.record("admission", 1e-3, 1.1e-3)         # on-model
+    led.record("migration", 1e-3, 5e-3, rank=1)   # 5x over
+    rep = led.report(factor=2.0)
+    assert rep["hops"]["admission"]["ratio"] == pytest.approx(1.1)
+    assert rep["hops"]["migration"]["ratio"] == pytest.approx(5.0)
+    assert rep["flagged"] == ["migration"]
+    assert rep["hops"]["migration"]["n_off"] == 1
+    assert rep["hops"]["migration"]["worst_over"] == pytest.approx(5.0)
+
+
+def test_residual_unmodeled_hop_is_inf():
+    led = R.ResidualLedger()
+    led.record("router_dispatch", 0.0, 1e-4)
+    rep = led.report()
+    assert rep["hops"]["router_dispatch"]["ratio"] == float("inf")
+    assert "router_dispatch" in rep["flagged"]
+
+
+def test_residual_under_factor_flagged_too():
+    led = R.ResidualLedger()
+    led.record("spec_verify", 1e-2, 1e-3)         # 10x under
+    assert led.report()["flagged"] == ["spec_verify"]
+
+
+def test_stall_detector_gated_on_runnable(tracer):
+    t0 = time.perf_counter()
+    t1 = t0 + 2e-3
+    tracer.on_wait("allreduce", t0, t1)           # no runnable hint: idle
+    assert tracer.residuals.report()["serialization_stall_s"] == 0.0
+    tracer.set_runnable(3)
+    tracer.on_wait("allreduce", t0, t1)           # blocked while runnable
+    rep = tracer.residuals.report()
+    assert rep["serialization_stall_s"] == pytest.approx(2e-3)
+    assert rep["stall_events"] == 1
+    waits = [e for e in tracer.events() if e["name"] == "wait:allreduce"]
+    assert len(waits) == 2 and waits[1]["args"]["runnable"] == 3
+
+
+def test_merge_reports_recombines_sums():
+    a, b = R.ResidualLedger(), R.ResidualLedger()
+    a.record("admission", 1e-3, 2e-3)
+    a.stall(1e-3, rank=0)
+    b.record("admission", 1e-3, 4e-3)
+    b.record("migration", 2e-3, 2e-3, rank=1)
+    b.stall(2e-3, rank=0)
+    merged = R.merge_reports([a.report(), b.report(), {}])
+    assert merged["hops"]["admission"]["n"] == 2
+    assert merged["hops"]["admission"]["ratio"] == pytest.approx(3.0)
+    assert merged["hops"]["migration"]["ratio"] == pytest.approx(1.0)
+    assert merged["flagged"] == ["admission"]
+    assert merged["serialization_stall_s"] == pytest.approx(3e-3)
+    assert merged["stall_by_rank"]["0"] == pytest.approx(3e-3)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_counter_gauge_histogram(tracer):
+    reg = M.active()
+    reg.counter("sched.admitted").inc(3)
+    reg.counter("sched.admitted").inc()
+    reg.gauge("sched.queue_depth").set(7)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        reg.histogram("latency_s").observe(v)
+    snap = reg.snapshot()
+    assert snap["counters"]["sched.admitted"] == 4.0
+    assert snap["gauges"]["sched.queue_depth"] == 7.0
+    h = snap["histograms"]["latency_s"]
+    assert h["count"] == 4.0 and h["mean"] == pytest.approx(2.5)
+    assert h["min"] == 1.0 and h["max"] == 4.0
+    reg.reset()
+    assert reg.snapshot() == {"counters": {}, "gauges": {},
+                              "histograms": {}}
+
+
+def test_snapshot_merges_registry_and_extra(tracer):
+    M.active().counter("tokens_out").inc(5)
+    out = M.snapshot(extra={"tok_s": 12.0})
+    assert out["tok_s"] == 12.0
+    assert out["metrics"]["counters"]["tokens_out"] == 5.0
+
+
+# ---------------------------------------------------------------------------
+# trial-flush wiring (the PR 5 req_log aliasing class)
+# ---------------------------------------------------------------------------
+
+def test_engine_reset_flushes_trial(tracer, bundle):
+    cfg, model, params = bundle
+    eng = ContinuousEngine(model, params, cache_len=32, num_slots=2,
+                           prefill_chunk=16, kv_layout="paged",
+                           block_size=8)
+    tracer.residuals.record("admission", 1e-3, 5e-3)   # warm-up pollution
+    M.active().counter("tokens_out").inc(9)
+    eng.reset()
+    assert tracer.residuals.counts() == {}
+    assert M.active().snapshot()["counters"] == {}
+
+
+def test_engine_reset_preserve_prefix_flushes_too(tracer, bundle):
+    cfg, model, params = bundle
+    eng = ContinuousEngine(model, params, cache_len=32, num_slots=2,
+                           prefill_chunk=16, kv_layout="paged",
+                           block_size=8, prefix_cache=True)
+    tracer.residuals.record("prefix_hit", 1e-3, 1e-3)
+    eng.reset(preserve_prefix=True)
+    assert tracer.residuals.counts() == {}
+
+
+def test_fabric_close_flushes_trial(tracer, bundle):
+    cfg, model, params = bundle
+    fab = ServingFabric(model, params, ranks=2, placement="replicated",
+                        cache_len=32, slots_per_rank=2, prefill_chunk=16,
+                        block_size=8)
+    tracer.residuals.record("router_dispatch", 1e-4, 1e-4)
+    fab.close()
+    assert tracer.residuals.counts() == {}
+    assert fab.scheduler.req_log == {}
+    assert fab.total_steps == 0
+
+
+def test_fabric_speculate_requires_replicated(bundle):
+    cfg, model, params = bundle
+    with pytest.raises(ValueError, match="disaggregated"):
+        ServingFabric(model, params, ranks=2, placement="disagg",
+                      cache_len=32, slots_per_rank=2, prefill_chunk=16,
+                      block_size=8, speculate=2)
+
+
+# ---------------------------------------------------------------------------
+# inert when disabled (the <2% overhead contract, structurally)
+# ---------------------------------------------------------------------------
+
+def test_disabled_hooks_inert(off):
+    assert T.active() is None
+    assert M.active() is None
+    T.flush_trial()                     # no-ops, no error
+    M.flush_trial()
+
+
+def test_disabled_guard_is_one_global_read(off):
+    """The instrumented-site pattern when telemetry is off: one module-
+    global read plus a None check. Bound it generously — the point is
+    that nothing allocates or reads the clock on the disabled path."""
+    n = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        tr = T.active()
+        if tr is not None:              # pragma: no cover
+            tr.instant("never")
+    dt = time.perf_counter() - t0
+    assert dt / n < 5e-6                # < 5us per guard, vastly above cost
+
+
+def test_install_is_fresh_each_time():
+    tr1 = T.install(capacity=16)
+    tr1.instant("stale")
+    tr2 = T.install(capacity=16)
+    try:
+        assert T.active() is tr2
+        assert tr2.n_events == 0
+    finally:
+        T.uninstall()
